@@ -1,0 +1,254 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  fig1_chains     — §4.1/Fig.1: longest random-normal matrix-product chain
+                    without catastrophic error: float32/64 vs GOOM LMME.
+  fig3_lyapunov   — §4.2/Fig.3: Lyapunov-spectrum estimation, sequential
+                    iterative-QR vs the paper's parallel algorithm
+                    (accuracy vs literature values + wall-time ratio).
+  fig4_rnn        — §4.3/Fig.4: train the GOOM-RNN (non-diagonal SSM over
+                    GOOMs, parallel scan, no stabilization) on Copy-Memory.
+  table1_range    — §3/Table 1: dynamic ranges, verified numerically.
+  appD_error      — App. D: per-op decimal digits of error of GOOM ops.
+  appD_time       — App. D: per-op wall-time of GOOM ops vs raw floats.
+  roofline        — §Dry-run/§Roofline: prints the roofline table from
+                    results/dryrun_baseline.json (run dryrun first).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def _bench(fn, *args, reps=3):
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+# ---------------------------------------------------------------------------
+def fig1_chains():
+    """Longest surviving chain S_t = A_t S_{t-1}, A ~ N(0,1)^{d x d}."""
+    from repro.core.chains import float_chain_survival, goom_chain
+
+    print("# fig1_chains: steps survived")
+    print("d,repr,steps_survived,final_log_frobenius_norm")
+    rows = []
+    for d in (8, 32, 128):
+        for name, dtype in (("float32", jnp.float32),):
+            res = jax.jit(
+                lambda k: float_chain_survival(k, d, 20_000, dtype)
+            )(jax.random.PRNGKey(0))
+            steps = int(res.steps_survived)
+            rows.append((d, name, steps, float(res.final_log_norm)))
+            print(f"{d},{name},{steps},{rows[-1][3]:.1f}")
+            assert steps < 20_000, "float chain must fail"
+        res = jax.jit(lambda k: goom_chain(k, d, 2_000))(jax.random.PRNGKey(0))
+        rows.append((d, "goom_c64", int(res.steps_survived),
+                     float(res.final_log_norm)))
+        print(f"{d},goom_c64,{int(res.steps_survived)},"
+              f"{float(res.final_log_norm):.1f}")
+        assert int(res.steps_survived) == 2_000, "GOOM chain must complete"
+    return {"rows": rows}
+
+
+def fig3_lyapunov():
+    """Spectrum accuracy + sequential/parallel wall-time ratio."""
+    from repro.core.lyapunov import (
+        SYSTEMS, spectrum_parallel, spectrum_sequential,
+        trajectory_and_jacobians,
+    )
+
+    print("# fig3_lyapunov: lambda_max vs literature; wall-time ratio")
+    print("system,lambda_max_est,lambda_max_ref,seq_ms,par_ms,seq_over_par")
+    out = {}
+    for name, sys_ in SYSTEMS.items():
+        n = 4096
+        _, js = trajectory_and_jacobians(sys_, n)
+        seq = jax.jit(lambda j: spectrum_sequential(j, sys_.dt))
+        par = jax.jit(lambda j: spectrum_parallel(j, sys_.dt, chunk_size=256))
+        t_seq = _bench(seq, js)
+        t_par = _bench(par, js)
+        spec = np.sort(np.asarray(par(js)))[::-1]
+        ref = np.sort(np.asarray(sys_.ref_spectrum))[::-1]
+        out[name] = dict(est=spec.tolist(), ref=ref.tolist(),
+                         seq_ms=t_seq * 1e3, par_ms=t_par * 1e3)
+        print(f"{name},{spec[0]:.4f},{ref[0]:.4f},"
+              f"{t_seq*1e3:.1f},{t_par*1e3:.1f},{t_seq/t_par:.2f}")
+        assert abs(spec[0] - ref[0]) < max(0.15, 0.2 * abs(ref[0]) + 0.05), name
+    return out
+
+
+def fig4_rnn():
+    """Train the paper's RNN on Copy-Memory; training must be 'unremarkable'."""
+    from repro.launch.train import main as train_main
+
+    print("# fig4_rnn: GOOM-RNN on copy task (reduced: 2L/64d, 120 steps)")
+    state = train_main([
+        "--arch", "goom-rnn-124m", "--smoke", "--task", "copy",
+        "--steps", "120", "--seq-len", "64", "--batch", "16",
+        "--lr", "3e-3", "--log-every", "30",
+    ])
+    return {"final_step": int(state.step)}
+
+
+def table1_range():
+    """Dynamic range table (§3, Table 1) — verified numerically."""
+    print("# table1_range: representable magnitude bounds")
+    print("repr,bits,smallest_normal,largest")
+    f32 = np.finfo(np.float32)
+    f64 = np.finfo(np.float64)
+    print(f"float32,32,{f32.tiny:.3e},{f32.max:.3e}")
+    print(f"float64,64,{f64.tiny:.3e},{f64.max:.3e}")
+    # GOOM(c64): the log-magnitude is itself an f32: exp(±3.4e38)
+    print(f"goom_c64,64,exp(-{f32.max:.3e}),exp(+{f32.max:.3e})")
+    print(f"goom_c128,128,exp(-{f64.max:.3e}),exp(+{f64.max:.3e})")
+    # verify: a GOOM with log-magnitude 1e30 still contracts finitely
+    from repro.core.goom import Goom, to_goom
+    from repro.core.ops import lmme_reference
+
+    a = to_goom(jnp.ones((4, 4)))
+    big = Goom(a.log_abs + 1e30, a.sign)
+    out = lmme_reference(big, a)
+    assert bool(jnp.all(jnp.isfinite(out.log_abs)))
+    return {}
+
+
+def appD_error():
+    """Per-op magnitude of error (decimal digits) vs float64 ground truth."""
+    from repro.core.goom import Goom, from_goom, to_goom
+    from repro.core.ops import goom_add, goom_mul, lmme_reference
+
+    print("# appD_error: max decimal digits of relative error, f32-GOOM ops")
+    rng = np.random.default_rng(0)
+    xs64 = 10.0 ** rng.uniform(-6, 6, 100_000)
+    ys64 = 10.0 ** rng.uniform(-6, 6, 100_000)
+    xs = jnp.asarray(xs64, jnp.float32)
+    ys = jnp.asarray(ys64, jnp.float32)
+
+    def digits(got, ref64):
+        rel = np.abs(np.asarray(got, np.float64) - ref64) / np.abs(ref64)
+        return float(np.log10(np.maximum(rel, 1e-17).max()))
+
+    g, h = to_goom(xs), to_goom(ys)
+    out = {
+        "reciprocal": digits(from_goom(Goom(-g.log_abs, g.sign)), 1.0 / xs64),
+        "square": digits(from_goom(goom_mul(g, g)), xs64 * xs64),
+        "sqrt": digits(from_goom(Goom(0.5 * g.log_abs, g.sign)),
+                       np.sqrt(xs64)),
+        "log": digits(g.log_abs, np.log(xs64)),
+        "mul": digits(from_goom(goom_mul(g, h)), xs64 * ys64),
+        "add": digits(from_goom(goom_add(g, h)), xs64 + ys64),
+    }
+    a64 = rng.normal(size=(256, 256))
+    b64 = rng.normal(size=(256, 256))
+    ref = a64 @ b64
+    got = from_goom(lmme_reference(to_goom(jnp.asarray(a64, jnp.float32)),
+                                   to_goom(jnp.asarray(b64, jnp.float32))))
+    out["matmul_fro_rel"] = float(
+        np.linalg.norm(np.asarray(got, np.float64) - ref) / np.linalg.norm(ref)
+    )
+    for k, v in out.items():
+        print(f"{k},{v:.3f}")
+    # float32 carries ~7.2 decimal digits; GOOM ops must stay within ~1.5
+    assert out["mul"] < -5.0 and out["square"] < -5.0
+    assert out["matmul_fro_rel"] < 1e-4
+    return out
+
+
+def appD_time():
+    """Per-op wall-time: GOOM vs raw float (App. D; CPU here, not GPU)."""
+    from repro.core.ops import goom_add, goom_mul, lmme_reference
+    from repro.core.goom import to_goom
+
+    print("# appD_time: mean ms per op on 4M-element batches (CPU)")
+    print("op,float_ms,goom_ms,ratio")
+    n = 1 << 22
+    x = jax.random.uniform(jax.random.PRNGKey(0), (n,)) + 0.1
+    y = jax.random.uniform(jax.random.PRNGKey(1), (n,)) + 0.1
+    gx, gy = to_goom(x), to_goom(y)
+    out = {}
+    for name, ff, gf in [
+        ("mul", jax.jit(lambda a, b: a * b), jax.jit(goom_mul)),
+        ("add", jax.jit(lambda a, b: a + b), jax.jit(goom_add)),
+    ]:
+        tf = _bench(ff, x, y)
+        tg = _bench(gf, gx, gy)
+        out[name] = {"float_ms": tf * 1e3, "goom_ms": tg * 1e3}
+        print(f"{name},{tf*1e3:.2f},{tg*1e3:.2f},{tg/tf:.1f}")
+    a = jax.random.normal(jax.random.PRNGKey(2), (512, 512))
+    b = jax.random.normal(jax.random.PRNGKey(3), (512, 512))
+    ga, gb = to_goom(a), to_goom(b)
+    tf = _bench(jax.jit(jnp.matmul), a, b)
+    tg = _bench(jax.jit(lmme_reference), ga, gb)
+    out["matmul"] = {"float_ms": tf * 1e3, "goom_ms": tg * 1e3}
+    print(f"matmul,{tf*1e3:.2f},{tg*1e3:.2f},{tg/tf:.1f}")
+    return out
+
+
+def roofline():
+    """Print the roofline table from the dry-run sweep results."""
+    path = os.path.join(RESULTS_DIR, "dryrun_baseline.json")
+    if not os.path.exists(path):
+        print("# roofline: run `python -m repro.launch.dryrun --all "
+              "--both-meshes --out results/dryrun_baseline.json` first")
+        return {}
+    with open(path) as f:
+        rows = json.load(f)
+    print("# roofline (from the compiled dry-run): times in ms")
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,bottleneck,"
+          "useful_frac,mfu,peak_GiB")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},SKIP")
+            continue
+        peak = (r.get("memory_per_device") or {}).get("peak_bytes", 0) / 2**30
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+              f"{r['collective_s']*1e3:.2f},{r['bottleneck']},"
+              f"{r['useful_fraction']:.2f},{r['mfu']:.4f},{peak:.1f}")
+    return {"n": len(rows)}
+
+
+ALL = {
+    "table1_range": table1_range,
+    "fig1_chains": fig1_chains,
+    "appD_error": appD_error,
+    "appD_time": appD_time,
+    "fig3_lyapunov": fig3_lyapunov,
+    "fig4_rnn": fig4_rnn,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    results = {}
+    for name in names:
+        print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
+        t0 = time.time()
+        results[name] = ALL[name]()
+        print(f"=== {name} done in {time.time()-t0:.1f}s")
+    with open(os.path.join(RESULTS_DIR, "bench_results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print("\nwrote results/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Parallel Lyapunov-spectrum estimation (paper §4.2) on chaotic systems.
+
+Run:  PYTHONPATH=src python examples/lyapunov_spectra.py [--steps 4096]
+
+Estimates the full spectrum for each in-repo dynamical system two ways:
+  * sequential iterative-QR (the standard method, eq. 19-20);
+  * the paper's parallel algorithm: prefix scan over GOOMs with
+    selective resetting of near-colinear deviation states (§4.2.1, §5).
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.lyapunov import (
+    SYSTEMS, lle_parallel, spectrum_parallel, spectrum_sequential,
+    trajectory_and_jacobians,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=4096)
+    ap.add_argument("--chunk", type=int, default=256)
+    args = ap.parse_args()
+
+    for name, system in SYSTEMS.items():
+        _, js = trajectory_and_jacobians(system, args.steps)
+        seq = jax.jit(lambda j: spectrum_sequential(j, system.dt))
+        par = jax.jit(
+            lambda j: spectrum_parallel(j, system.dt, chunk_size=args.chunk))
+        lle = jax.jit(lambda j: lle_parallel(j, system.dt))
+
+        s_seq = np.sort(np.asarray(seq(js)))[::-1]   # compile+run
+        s_par = np.sort(np.asarray(par(js)))[::-1]
+        l_par = float(lle(js))
+
+        t0 = time.perf_counter(); seq(js).block_until_ready()
+        t_seq = time.perf_counter() - t0
+        t0 = time.perf_counter(); par(js).block_until_ready()
+        t_par = time.perf_counter() - t0
+
+        ref = np.sort(np.asarray(system.ref_spectrum))[::-1]
+        print(f"\n{name} ({args.steps} steps, dt={system.dt}):")
+        print(f"  literature : {np.array2string(ref, precision=3)}")
+        print(f"  sequential : {np.array2string(s_seq, precision=3)}  "
+              f"({t_seq*1e3:.0f} ms)")
+        print(f"  parallel   : {np.array2string(s_par, precision=3)}  "
+              f"({t_par*1e3:.0f} ms)")
+        print(f"  LLE (eq.24): {l_par:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end training driver: the paper's GOOM-RNN (§4.3) on Copy-Memory.
+
+The full 124M-parameter configuration (24 layers, d=768, GPT-2 vocab —
+paper Fig. 4-left) trains with exactly this driver on accelerators:
+
+  PYTHONPATH=src python examples/train_goom_rnn.py --full --steps 300
+
+On this CPU container the default is the reduced config (same family,
+2 layers), a few hundred steps, demonstrating the paper's headline §4.3
+claim: a *non-diagonal* recurrent model, computed in parallel via a prefix
+scan over GOOMs, trains with NO stabilization of any kind — no gradient
+clipping tricks on the recurrence, no spectral normalization, no decay
+constraints on A.
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="124M config (needs accelerators)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "goom-rnn-124m",
+        "--task", "copy",
+        "--steps", str(args.steps),
+        "--seq-len", str(args.seq_len),
+        "--batch", str(args.batch),
+        "--lr", "3e-3",
+        "--log-every", "20",
+    ]
+    if not args.full:
+        argv.append("--smoke")
+    if args.ckpt_dir:
+        argv += ["--ckpt-dir", args.ckpt_dir]
+    train_main(argv)
+
+
+if __name__ == "__main__":
+    main()

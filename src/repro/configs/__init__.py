@@ -1,0 +1,35 @@
+"""Architecture registry: the 10 assigned archs + the paper's GOOM-RNN."""
+
+from .base import (
+    SHAPES,
+    ShapeCfg,
+    get_config,
+    input_specs,
+    list_archs,
+    register,
+    shape_applicable,
+)
+
+# assigned architectures (public-literature configs)
+register("qwen2-vl-7b", "repro.configs.qwen2_vl_7b")
+register("rwkv6-7b", "repro.configs.rwkv6_7b")
+register("mixtral-8x7b", "repro.configs.mixtral_8x7b")
+register("phi3.5-moe", "repro.configs.phi35_moe")
+register("olmo-1b", "repro.configs.olmo_1b")
+register("codeqwen1.5-7b", "repro.configs.codeqwen15_7b")
+register("glm4-9b", "repro.configs.glm4_9b")
+register("gemma3-1b", "repro.configs.gemma3_1b")
+register("jamba-v0.1", "repro.configs.jamba_v01")
+register("musicgen-large", "repro.configs.musicgen_large")
+# the paper's own architecture (§4.3)
+register("goom-rnn-124m", "repro.configs.goom_rnn_124m")
+
+ASSIGNED_ARCHS = [
+    "qwen2-vl-7b", "rwkv6-7b", "mixtral-8x7b", "phi3.5-moe", "olmo-1b",
+    "codeqwen1.5-7b", "glm4-9b", "gemma3-1b", "jamba-v0.1", "musicgen-large",
+]
+
+__all__ = [
+    "SHAPES", "ShapeCfg", "get_config", "input_specs", "list_archs",
+    "register", "shape_applicable", "ASSIGNED_ARCHS",
+]

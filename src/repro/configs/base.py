@@ -1,0 +1,162 @@
+"""Config substrate: shape registry, input specs, and arch-config helpers.
+
+Every architecture file exports ``config()`` (the full published config) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import AttentionCfg
+from ..models.blocks import BlockCfg, GroupCfg
+from ..models.goom_layer import GoomSSMCfg
+from ..models.mlp import MlpCfg, MoeCfg
+from ..models.model import LMConfig
+from ..models.ssm import MambaCfg, Rwkv6Cfg
+
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned to this paper)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode" | "long_decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "long_decode"),
+}
+
+
+def shape_applicable(cfg: LMConfig, shape: ShapeCfg) -> Tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason if skipped."""
+    if shape.kind == "long_decode" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is a pure full-attention arch (see DESIGN.md)"
+        )
+    return True, ""
+
+
+def input_specs(cfg: LMConfig, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a step.
+
+    train/prefill: the full (B, S) token batch (+ frontend stubs).
+    decode/long_decode: one new token per sequence (the KV/SSM caches are
+    created by the serve driver, not part of the input specs).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.frontend == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), f32
+            )
+            if cfg.mrope:
+                specs["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        elif cfg.frontend == "audio":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), f32
+            )
+        return specs
+
+    # decode: one token per sequence
+    specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block factory helpers
+# ---------------------------------------------------------------------------
+def attn_block(
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_ff: int,
+    *,
+    head_dim: Optional[int] = None,
+    rope_theta: float = 10000.0,
+    rotary_fraction: float = 1.0,
+    window: Optional[int] = None,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    mrope_sections: Optional[Tuple[int, ...]] = None,
+    query_scale: Optional[float] = None,
+    activation: str = "silu",
+    gated: bool = True,
+    moe: Optional[MoeCfg] = None,
+    norm: str = "rms",
+    post_norms: bool = False,
+) -> BlockCfg:
+    hd = head_dim if head_dim is not None else d_model // n_heads
+    attn = AttentionCfg(
+        d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=hd,
+        rope_theta=rope_theta, rotary_fraction=rotary_fraction, window=window,
+        qkv_bias=qkv_bias, qk_norm=qk_norm, mrope_sections=mrope_sections,
+        query_scale=query_scale,
+    )
+    if moe is not None:
+        return BlockCfg(mixer="attention", channel="moe", attn=attn, moe=moe,
+                        norm=norm, post_norms=post_norms)
+    return BlockCfg(
+        mixer="attention", channel="mlp", attn=attn,
+        mlp=MlpCfg(d_model=d_model, d_ff=d_ff, activation=activation, gated=gated),
+        norm=norm, post_norms=post_norms,
+    )
+
+
+def uniform_groups(block: BlockCfg, n_layers: int) -> Tuple[GroupCfg, ...]:
+    return (GroupCfg(period=(block,), n_periods=n_layers),)
+
+
+def transform_blocks(cfg: LMConfig, fn) -> LMConfig:
+    """Rebuild a config with ``fn(BlockCfg) -> BlockCfg`` applied everywhere
+    (perf-iteration helper: e.g. flip attention to banded SWA)."""
+    import dataclasses
+
+    groups = tuple(
+        dataclasses.replace(g, period=tuple(fn(blk) for blk in g.period))
+        for g in cfg.groups
+    )
+    return dataclasses.replace(cfg, groups=groups)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, str] = {}  # name -> module
+
+
+def register(name: str, module: str):
+    _REGISTRY[name] = module
+
+
+def get_config(name: str, smoke: bool = False) -> LMConfig:
+    import importlib
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    mod = importlib.import_module(_REGISTRY[name])
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def list_archs():
+    return sorted(_REGISTRY)

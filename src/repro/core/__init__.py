@@ -1,0 +1,42 @@
+"""GOOM core: representation, ops, scans, and the paper's experiments 1–2."""
+
+from .goom import (
+    Goom,
+    LOG_ZERO,
+    finite_floor,
+    from_goom,
+    goom_from_complex,
+    goom_ones,
+    goom_to_complex,
+    goom_zeros,
+    nonzero_sign,
+    safe_abs,
+    safe_log,
+    signed_exp,
+    to_goom,
+)
+from .ops import (
+    goom_add,
+    goom_dot,
+    goom_lse,
+    goom_matmul,
+    goom_mul,
+    goom_neg,
+    goom_norm,
+    goom_normalize_cols,
+    goom_scale,
+    goom_sub,
+    lmme_naive,
+    lmme_reference,
+    scaled_exp,
+)
+from .scan import (
+    colinearity_select,
+    cumulative_lmme,
+    diagonal_scan,
+    matrix_scan,
+    orthonormal_reset,
+    selective_reset_scan,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,189 @@
+"""Real-valued operations over GOOMs (paper §3).
+
+All functions take/return ``Goom`` pytrees in the split representation.
+Multiplication over R is addition over C' (Example 1); sums over R are
+signed log-sum-exp (Example 2); matrix products are LMME (eq. 9).
+
+Two LMME implementations live here:
+
+  * ``lmme_naive``      — the exact eq. 9 (O(n*d*m) space); test oracle only.
+  * ``lmme_reference``  — the paper's "compromise" (eq. 10–12): global
+                          per-row/per-column max scaling + one real matmul.
+
+The production Pallas kernel (tiled, online-rescaled) is in
+``repro.kernels.lmme`` and is numerically strictly better than the
+compromise on long contractions.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .goom import (
+    Goom,
+    finite_floor,
+    from_goom,
+    goom_zeros,
+    nonzero_sign,
+    safe_abs,
+    safe_log,
+    to_goom,
+)
+
+__all__ = [
+    "goom_mul",
+    "goom_neg",
+    "goom_add",
+    "goom_sub",
+    "goom_scale",
+    "goom_lse",
+    "goom_dot",
+    "lmme_naive",
+    "lmme_reference",
+    "goom_norm",
+    "goom_normalize_cols",
+]
+
+
+# ---------------------------------------------------------------------------
+# elementwise ring operations
+# ---------------------------------------------------------------------------
+def goom_mul(a: Goom, b: Goom) -> Goom:
+    """x*y over R == elementwise addition over C' (Example 1)."""
+    return Goom(a.log_abs + b.log_abs, a.sign * b.sign)
+
+
+def goom_neg(a: Goom) -> Goom:
+    return Goom(a.log_abs, -a.sign)
+
+
+def goom_scale(a: Goom, log_c) -> Goom:
+    """Multiply by a positive constant exp(log_c) (pure log-space shift)."""
+    return Goom(a.log_abs + log_c, a.sign)
+
+
+def goom_lse(a: Goom, axis=None, keepdims: bool = False) -> Goom:
+    """Signed log-sum-exp over ``axis``: log|sum(sign*exp(log_abs))| + sign.
+
+    The max-subtraction is detached (paper: scaling constants are computed
+    detached from the graph), so gradients flow through exp/log only.
+    """
+    m = jax.lax.stop_gradient(
+        jnp.max(a.log_abs, axis=axis, keepdims=True)
+    )
+    # Guard all-zero slices (m == -inf): keep m finite so -inf - m != NaN.
+    m = jnp.where(jnp.isfinite(m), m, jnp.zeros_like(m))
+    t = jnp.sum(a.sign * jnp.exp(a.log_abs - m), axis=axis, keepdims=True)
+    out_log = safe_log(safe_abs(t)) + m
+    out_sign = nonzero_sign(t)
+    if not keepdims:
+        out_log = jnp.squeeze(out_log, axis=axis)
+        out_sign = jnp.squeeze(out_sign, axis=axis)
+    return Goom(out_log, out_sign)
+
+
+def goom_add(a: Goom, b: Goom) -> Goom:
+    """x+y over R == signed LSE of the two GOOMs (Example 2 with d=2)."""
+    stacked = Goom(
+        jnp.stack([a.log_abs, b.log_abs], axis=0),
+        jnp.stack([a.sign, b.sign], axis=0),
+    )
+    return goom_lse(stacked, axis=0)
+
+
+def goom_sub(a: Goom, b: Goom) -> Goom:
+    return goom_add(a, goom_neg(b))
+
+
+def goom_dot(a: Goom, b: Goom) -> Goom:
+    """Dot product of two 1-D GOOM vectors (Example 2)."""
+    return goom_lse(goom_mul(a, b), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LMME — log-matrix-multiplication-exp (paper §3.2)
+# ---------------------------------------------------------------------------
+def lmme_naive(a: Goom, b: Goom) -> Goom:
+    """Exact eq. 9: LSE over the full (..., n, d, m) sum tensor.
+
+    O(n*d*m) memory — oracle for tests only.
+    Supports leading batch dims on either side (broadcast like jnp.matmul).
+    """
+    z_log = a.log_abs[..., :, :, None] + b.log_abs[..., None, :, :]
+    z_sign = a.sign[..., :, :, None] * b.sign[..., None, :, :]
+    return goom_lse(Goom(z_log, z_sign), axis=-2)
+
+
+def lmme_reference(a: Goom, b: Goom, *, dot_dtype=None, clip_at_zero: bool = False) -> Goom:
+    """The paper's compromise LMME (eq. 10–12).
+
+    Scale each row of ``a`` and column of ``b`` by the (detached) max of its
+    log-magnitudes, run one real matmul on the exp'd signed values, then map
+    back through safe log and undo the scaling.
+
+    Deviation from paper eq. 11: the paper clips scales at zero
+    (``max(max_j(.), 0)``), which blocks *up*-scaling of tiny rows/columns —
+    a chain whose contracting direction drops below float range then
+    underflows to exact zero mid-product.  We scale by the raw max
+    (``clip_at_zero=False``), which keeps every contraction near unit scale
+    and is strictly better: exp(A'-a) <= 1 holds either way.  Pass
+    ``clip_at_zero=True`` for the paper-faithful variant.
+    """
+    ai = jax.lax.stop_gradient(jnp.max(a.log_abs, axis=-1, keepdims=True))
+    bk = jax.lax.stop_gradient(jnp.max(b.log_abs, axis=-2, keepdims=True))
+    ai = jnp.where(jnp.isfinite(ai), ai, 0.0)  # eq. 11 (all-zero guard)
+    bk = jnp.where(jnp.isfinite(bk), bk, 0.0)
+    if clip_at_zero:
+        ai = jnp.maximum(ai, 0.0)
+        bk = jnp.maximum(bk, 0.0)
+
+    ar = (a.sign * jnp.exp(a.log_abs - ai))
+    br = (b.sign * jnp.exp(b.log_abs - bk))
+    if dot_dtype is not None:
+        ar, br = ar.astype(dot_dtype), br.astype(dot_dtype)
+    prod = jnp.matmul(ar, br, preferred_element_type=a.dtype).astype(a.dtype)
+
+    out_log = safe_log(safe_abs(prod)) + ai + bk  # eq. 10 un-scaling
+    out_sign = nonzero_sign(prod)
+    return Goom(out_log, out_sign)
+
+
+# ---------------------------------------------------------------------------
+# norms / scaling helpers (used by Lyapunov + the RNN head, eq. 27)
+# ---------------------------------------------------------------------------
+def goom_norm(a: Goom, axis=-1, keepdims: bool = False) -> jax.Array:
+    """log of the L2 norm along ``axis``: 0.5 * LSE(2*log_abs)."""
+    doubled = Goom(2.0 * a.log_abs, jnp.ones_like(a.sign))
+    return 0.5 * goom_lse(doubled, axis=axis, keepdims=keepdims).log_abs
+
+
+def goom_normalize_cols(a: Goom) -> Goom:
+    """Log-scale the columns of a (..., d, k) GOOM matrix to log-unit norms.
+
+    All-zero columns (norm == -inf) are left unscaled to avoid -inf - -inf.
+    """
+    ln = jax.lax.stop_gradient(goom_norm(a, axis=-2, keepdims=True))
+    ln = jnp.where(jnp.isfinite(ln), ln, 0.0)
+    return Goom(a.log_abs - ln, a.sign)
+
+
+def goom_matmul(a: Goom, b: Goom) -> Goom:
+    """Default LMME entry point (reference compromise; kernels override)."""
+    return lmme_reference(a, b)
+
+
+# ---------------------------------------------------------------------------
+# scaled exponentiation back to floats (paper eq. 27)
+# ---------------------------------------------------------------------------
+def scaled_exp(a: Goom, axis=None, shift: float = 2.0):
+    """exp(x' - max + shift): bounded map back to floats, detached scaling.
+
+    Returns (values, log_scale) so callers can undo the scaling if needed.
+    """
+    c = jax.lax.stop_gradient(jnp.max(a.log_abs, axis=axis, keepdims=True))
+    c = jnp.where(jnp.isfinite(c), c, jnp.zeros_like(c))
+    vals = from_goom(Goom(a.log_abs - c + shift, a.sign))
+    return vals, c - shift

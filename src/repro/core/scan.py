@@ -1,0 +1,238 @@
+"""Parallel prefix scans of linear recurrences over GOOMs (paper §4.2, §5).
+
+Conventions
+-----------
+Scans run over the *leading* axis (time).  For a recurrence
+``X_t = A_t · X_{t-1} (+ B_t)`` the combine of an earlier compound
+``(A_e, B_e)`` with a later one ``(A_l, B_l)`` is
+
+    A = A_l ∘ A_e            (∘ = LMME for matrices, goom_mul for diagonal)
+    B = A_l ∘ B_e ⊕ B_l      (⊕ = elementwise signed LSE)
+
+which matches ``jax.lax.associative_scan``'s ``fn(earlier, later)`` ordering.
+
+Selective resetting (paper §5 / App. C) adds a per-element ``has_reset`` flag:
+a compound whose bias is still "all zeros" (flag False) may be reset once —
+its transition matrix is zeroed and its bias replaced by ``reset_fn(A*)``.
+The flag replaces the paper's literal ``B* == 0`` test (exact-zero tests are
+fragile over floats; the flag is equivalent because biases start at zero and
+only become nonzero through a reset).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .goom import Goom, from_goom, goom_zeros, to_goom
+from .ops import (
+    goom_add,
+    goom_lse,
+    goom_mul,
+    goom_normalize_cols,
+    lmme_reference,
+)
+
+__all__ = [
+    "diagonal_scan",
+    "matrix_scan",
+    "cumulative_lmme",
+    "selective_reset_scan",
+    "colinearity_select",
+    "orthonormal_reset",
+]
+
+
+# ---------------------------------------------------------------------------
+# diagonal recurrence:  x_t = a_t ⊙ x_{t-1} ⊕ b_t   (RWKV6 / Mamba / SSMs)
+# ---------------------------------------------------------------------------
+def _diag_combine(e, l):
+    a_e, b_e = e
+    a_l, b_l = l
+    a = goom_mul(a_l, a_e)
+    b = goom_add(goom_mul(a_l, b_e), b_l)
+    return (a, b)
+
+
+def diagonal_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+    """All states of the diagonal GOOM recurrence, via associative scan.
+
+    a, b: Gooms with leading time axis (T, ...).  Returns states (T, ...).
+    ``x0`` (shape (...)) defaults to zero (i.e. states are driven by b only).
+    """
+    a_star, b_star = jax.lax.associative_scan(_diag_combine, (a, b), axis=0)
+    if x0 is None:
+        return b_star
+    x0b = Goom(
+        jnp.broadcast_to(x0.log_abs, a_star.shape),
+        jnp.broadcast_to(x0.sign, a_star.shape),
+    )
+    return goom_add(goom_mul(a_star, x0b), b_star)
+
+
+# ---------------------------------------------------------------------------
+# non-diagonal recurrence:  X_t = A_t X_{t-1} ⊕ B_t   (paper §4.3 RNN)
+# ---------------------------------------------------------------------------
+def _matrix_combine(matmul):
+    def combine(e, l):
+        a_e, b_e = e
+        a_l, b_l = l
+        a = matmul(a_l, a_e)
+        b = goom_add(matmul(a_l, b_e), b_l)
+        return (a, b)
+
+    return combine
+
+
+def matrix_scan(
+    a: Goom,
+    b: Goom,
+    x0: Optional[Goom] = None,
+    *,
+    matmul: Callable[[Goom, Goom], Goom] = lmme_reference,
+) -> Goom:
+    """All states of the matrix GOOM recurrence X_t = A_t X_{t-1} ⊕ B_t.
+
+    a: (T, ..., d, d) transition Gooms; b: (T, ..., d, m) bias Gooms.
+    Returns the sequence of (T, ..., d, m) states.
+    """
+    a_star, b_star = jax.lax.associative_scan(_matrix_combine(matmul), (a, b), axis=0)
+    if x0 is None:
+        return b_star
+    t = a_star.shape[0]
+    x0b = Goom(
+        jnp.broadcast_to(x0.log_abs, (t,) + x0.shape),
+        jnp.broadcast_to(x0.sign, (t,) + x0.shape),
+    )
+    return goom_add(matmul(a_star, x0b), b_star)
+
+
+def cumulative_lmme(
+    a: Goom, *, matmul: Callable[[Goom, Goom], Goom] = lmme_reference
+) -> Goom:
+    """PSCAN(LMME): all prefix products A_t···A_1 (paper eq. 24's scan)."""
+
+    def combine(e, l):
+        return matmul(l, e)
+
+    return jax.lax.associative_scan(combine, a, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# selective resetting (paper §5)
+# ---------------------------------------------------------------------------
+class _ResetState(NamedTuple):
+    a_log: jax.Array
+    a_sign: jax.Array
+    b_log: jax.Array
+    b_sign: jax.Array
+    has_reset: jax.Array  # bool, one flag per scan element
+    contains_x0: jax.Array  # bool: compound includes element 0 (is a *state*)
+
+
+def _where_goom(cond, x: Goom, y: Goom) -> Goom:
+    c = cond[..., None, None]
+    return Goom(jnp.where(c, x.log_abs, y.log_abs), jnp.where(c, x.sign, y.sign))
+
+
+def selective_reset_scan(
+    a: Goom,
+    select_fn: Callable[[Goom], jax.Array],
+    reset_fn: Callable[[Goom], Goom],
+    *,
+    matmul: Callable[[Goom, Goom], Goom] = lmme_reference,
+    reset_only_state_compounds: bool = True,
+) -> Tuple[Goom, jax.Array]:
+    """Prefix scan of X_t = A_t X_{t-1} with conditional resets (paper §5).
+
+    a: (T, ..., d, d) GOOM transition matrices; fold the initial state in as
+    element 0 (paper App. C convention).  ``select_fn`` maps a batched GOOM
+    matrix (..., d, d) to a bool (...,); ``reset_fn`` maps it to a replacement
+    GOOM matrix.  Returns (states, was_reset_flags).
+
+    The combine implements eq. 28:  if S(A*_e)=1 and the earlier compound has
+    not been reset, replace (A*_e, B*_e) <- (0, R(A*_e)); then the ordinary
+    recurrence.  Associativity holds because each compound can be reset at
+    most once and a zeroed transition absorbs everything earlier.
+
+    ``reset_only_state_compounds`` (default True) restricts resets to
+    compounds that *contain element 0* — i.e. actual deviation states.
+    Interior compounds are products of Jacobians — linear maps whose singular
+    values carry the exponents; orthonormalizing those would erase them.
+    The paper's prose ("reset interim deviation *states*", §4.2.1a) implies
+    this gate; eq. 28 alone does not spell it out.
+    """
+    zeros = goom_zeros(a.shape, a.dtype)
+
+    def combine(e: _ResetState, l: _ResetState) -> _ResetState:
+        a_e = Goom(e.a_log, e.a_sign)
+        b_e = Goom(e.b_log, e.b_sign)
+        a_l = Goom(l.a_log, l.a_sign)
+        b_l = Goom(l.b_log, l.b_sign)
+
+        eligible = jnp.logical_not(e.has_reset)
+        if reset_only_state_compounds:
+            eligible = jnp.logical_and(eligible, e.contains_x0)
+        do_reset = jnp.logical_and(select_fn(a_e), eligible)
+        zero = goom_zeros(a_e.shape, a_e.dtype)
+        b_e = _where_goom(do_reset, reset_fn(a_e), b_e)
+        a_e = _where_goom(do_reset, zero, a_e)
+        e_has_reset = jnp.logical_or(e.has_reset, do_reset)
+
+        a_out = matmul(a_l, a_e)
+        b_out = goom_add(matmul(a_l, b_e), b_l)
+        return _ResetState(
+            a_out.log_abs,
+            a_out.sign,
+            b_out.log_abs,
+            b_out.sign,
+            jnp.logical_or(e_has_reset, l.has_reset),
+            jnp.logical_or(e.contains_x0, l.contains_x0),
+        )
+
+    t = a.shape[0]
+    contains_x0 = jnp.zeros((t,) + a.shape[1:-2], bool).at[0].set(True)
+    init = _ResetState(
+        a.log_abs,
+        a.sign,
+        zeros.log_abs,
+        zeros.sign,
+        jnp.zeros(a.shape[:-2], bool),
+        contains_x0,
+    )
+    out = jax.lax.associative_scan(combine, init, axis=0)
+    states = goom_add(
+        Goom(out.a_log, out.a_sign), Goom(out.b_log, out.b_sign)
+    )
+    # X_t = A*_t (+ B*_t): when un-reset, B* is zero (floor) and the LSE
+    # returns A*; when reset, A* has been zeroed and the LSE returns B*.
+    return states, out.has_reset
+
+
+# ---------------------------------------------------------------------------
+# selection / reset functions used by the Lyapunov pipeline (paper §4.2.1a)
+# ---------------------------------------------------------------------------
+def colinearity_select(threshold: float = 0.99) -> Callable[[Goom], jax.Array]:
+    """True where any pair of state columns has |cosine similarity| > thresh."""
+
+    def select(a: Goom) -> jax.Array:
+        v = from_goom(goom_normalize_cols(a))  # unit columns: safe to exp
+        gram = jnp.einsum("...ij,...ik->...jk", v, v)
+        d = gram.shape[-1]
+        off = jnp.abs(gram) * (1.0 - jnp.eye(d, dtype=gram.dtype))
+        return jnp.max(off, axis=(-2, -1)) > threshold
+
+    return select
+
+
+def orthonormal_reset() -> Callable[[Goom], Goom]:
+    """Replace a near-colinear state with an orthonormal basis of its span."""
+
+    def reset(a: Goom) -> Goom:
+        v = from_goom(goom_normalize_cols(a))
+        q, _ = jnp.linalg.qr(v)
+        return to_goom(q)
+
+    return reset

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the GOOM diagonal-scan kernel.
+
+Reuses ``repro.core.scan.diagonal_scan`` (jax.lax.associative_scan over the
+same combine) — the function the rest of the framework falls back to when
+kernels are disabled.  Its native JAX autodiff is also the gradient oracle
+for the kernel wrapper's custom VJP.
+"""
+
+from typing import Optional
+
+from repro.core.goom import Goom
+from repro.core.scan import diagonal_scan
+
+
+def goom_diag_scan_ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+    return diagonal_scan(a, b, x0)

@@ -1,0 +1,3 @@
+from .ops import lmme_pallas
+
+__all__ = ["lmme_pallas"]

@@ -1,0 +1,125 @@
+"""Public jit'd wrapper for the Pallas LMME kernel.
+
+Handles batching (arbitrary leading dims), padding to block multiples
+(padded contraction entries are exact zeros: log = -inf, so they contribute
+``exp(-inf) == 0`` to every sum — no masking needed), backend selection
+(``interpret=True`` off-TPU), and a custom VJP (backward pass reuses the
+reference implementation's autodiff on the saved inputs, which computes the
+same mathematical function).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goom import Goom
+from repro.core.ops import lmme_reference
+
+from .lmme import lmme_kernel_call
+
+__all__ = ["lmme_pallas"]
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, fill: float) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _lmme_planes(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+    return _lmme_fwd_impl(
+        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret
+    )
+
+
+def _lmme_fwd_impl(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+    n, d = a_log.shape[-2:]
+    m = b_log.shape[-1]
+    batch = a_log.shape[:-2]
+
+    def flat(x):
+        return x.reshape((-1,) + x.shape[-2:])
+
+    # Pad with exact zeros (log=-inf, sign=+1): padded K entries add 0 to
+    # every contraction; padded N/M rows are sliced away below.
+    al = _pad_to(_pad_to(flat(a_log), 1, block_n, -jnp.inf), 2, block_d, -jnp.inf)
+    asn = _pad_to(_pad_to(flat(a_sign), 1, block_n, 1.0), 2, block_d, 1.0)
+    bl = _pad_to(_pad_to(flat(b_log), 1, block_d, -jnp.inf), 2, block_m, -jnp.inf)
+    bsn = _pad_to(_pad_to(flat(b_sign), 1, block_d, 1.0), 2, block_m, 1.0)
+
+    out_log, out_sign = lmme_kernel_call(
+        al, asn, bl, bsn,
+        block_n=block_n, block_m=block_m, block_d=block_d, interpret=interpret,
+    )
+    out_log = out_log[:, :n, :m].reshape(batch + (n, m))
+    out_sign = out_sign[:, :n, :m].reshape(batch + (n, m))
+    return out_log, out_sign
+
+
+def _lmme_fwd(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+    out = _lmme_fwd_impl(
+        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret
+    )
+    return out, (a_log, a_sign, b_log, b_sign)
+
+
+def _lmme_bwd(block_n, block_m, block_d, interpret, res, cts):
+    a_log, a_sign, b_log, b_sign = res
+    g_log, _g_sign = cts  # sign planes are piecewise-constant: no cotangent
+
+    def f(al, bl):
+        return lmme_reference(Goom(al, a_sign), Goom(bl, b_sign)).log_abs
+
+    _, vjp = jax.vjp(f, a_log, b_log)
+    d_al, d_bl = vjp(g_log)
+    return d_al, jnp.zeros_like(a_sign), d_bl, jnp.zeros_like(b_sign)
+
+
+_lmme_planes.defvjp(_lmme_fwd, _lmme_bwd)
+
+
+def lmme_pallas(
+    a: Goom,
+    b: Goom,
+    *,
+    block_n: int = 128,
+    block_m: int = 128,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> Goom:
+    """LMME over GOOMs via the tiled online-rescaled Pallas kernel.
+
+    ``a``: (..., n, d), ``b``: (..., d, m) — leading dims broadcast like
+    ``jnp.matmul``.  f32 planes only (TPU kernel dtype).
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+
+    # Broadcast leading batch dims.
+    batch = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    al = jnp.broadcast_to(a.log_abs, batch + a.shape[-2:]).astype(jnp.float32)
+    asn = jnp.broadcast_to(a.sign, batch + a.shape[-2:]).astype(jnp.float32)
+    bl = jnp.broadcast_to(b.log_abs, batch + b.shape[-2:]).astype(jnp.float32)
+    bsn = jnp.broadcast_to(b.sign, batch + b.shape[-2:]).astype(jnp.float32)
+
+    # Clamp block sizes to (padded) dims to avoid huge pads for small inputs.
+    n, d = al.shape[-2:]
+    m = bl.shape[-1]
+    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+    bm = min(block_m, max(128, 1 << (m - 1).bit_length()))
+    bd = min(block_d, max(128, 1 << (d - 1).bit_length()))
+
+    out_log, out_sign = _lmme_planes(al, asn, bl, bsn, bn, bm, bd, interpret)
+    return Goom(out_log, out_sign)

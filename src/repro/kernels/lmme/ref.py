@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the LMME kernel.
+
+``lmme_naive`` (exact, O(ndm) memory) is the ground truth for small shapes;
+``lmme_reference`` (the paper's eq. 10 compromise, with the clip-at-zero
+fix) is the scalable cross-check for larger sweeps.  Both come from
+``repro.core.ops`` so the kernel is asserted against the same functions the
+rest of the framework uses.
+"""
+
+from repro.core.goom import Goom
+from repro.core.ops import lmme_naive, lmme_reference
+
+
+def lmme_ref(a_log, a_sign, b_log, b_sign):
+    """Plane-level oracle matching the kernel's calling convention."""
+    out = lmme_reference(Goom(a_log, a_sign), Goom(b_log, b_sign))
+    return out.log_abs, out.sign
+
+
+def lmme_ref_exact(a_log, a_sign, b_log, b_sign):
+    out = lmme_naive(Goom(a_log, a_sign), Goom(b_log, b_sign))
+    return out.log_abs, out.sign

@@ -1,0 +1,405 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE,
+regardless of trip count — useless for scanned-layer models (a 32-layer
+scan reads as one layer).  This module re-derives FLOPs / bytes-accessed /
+collective-bytes directly from the compiled HLO, walking the computation
+graph and weighting each computation by the product of enclosing while-loop
+trip counts.
+
+Cost model (matches XLA's own conventions where they work):
+  * FLOPs:  dot ops — 2 · prod(result dims) · prod(contracting dims);
+            elementwise/transcendental ops are counted at 1 flop/element
+            for ops in a small "math" set (exp, log, tanh, ...), else 0.
+  * bytes:  per top-level instruction: Σ operand sizes + result size
+            (fusions count their boundary, not their interior — exactly
+            XLA's "bytes accessed" model).
+  * collectives: ring-cost bytes per participating device (see roofline.py).
+
+Trip counts parse from the loop condition's ``constant(N)`` compare; loops
+whose bound cannot be determined default to 1 (and are reported).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# result-shape tokens like  f32[4,16,512]{2,1,0}  or tuples thereof
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*|pred|token)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_CALL_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_MATH_OPS = {
+    "exponential", "log", "tanh", "sqrt", "rsqrt", "power", "divide",
+    "sine", "cosine", "logistic", "exponential-minus-one", "log-plus-one",
+    "add", "subtract", "multiply", "maximum", "minimum", "compare",
+    "select", "and", "or", "negate", "abs",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        bpe = _DTYPE_BYTES.get(dtype)
+        if bpe is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bpe
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    op: str
+    result_text: str
+    rest: str          # everything after the '('
+    result_bytes: int
+
+    def called_computations(self) -> List[str]:
+        out = [m.group(1) for m in _CALL_RE.finditer(self.rest)]
+        for m in _BRANCHES_RE.finditer(self.rest):
+            out.extend(nm.strip().lstrip("%") for nm in m.group(1).split(","))
+        return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    params: Dict[str, int]  # param name -> bytes
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    header_re = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = header_re.match(line.strip())
+            if m:
+                is_entry, name, params = m.groups()
+                pdict = {}
+                # split params at top-level commas only (types may be tuples)
+                depth = 0
+                part = ""
+                parts = []
+                for ch in params:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                    if ch == "," and depth == 0:
+                        parts.append(part)
+                        part = ""
+                    else:
+                        part += ch
+                if part.strip():
+                    parts.append(part)
+                for p in parts:
+                    p = p.strip()
+                    if not p or ":" not in p:
+                        continue
+                    pname = p.split(":")[0].strip().lstrip("%")
+                    pdict[pname] = _shape_bytes(p)
+                cur = Computation(name, [], pdict)
+                comps[name] = cur
+                if is_entry:
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result_text, op, rest = m.groups()
+        cur.instructions.append(
+            Instruction(name, op, result_text, rest, _shape_bytes(result_text))
+        )
+    return comps, entry
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0      # fusion-boundary model (upper bound:
+                                     # CPU fusion is weaker than TPU's)
+    bytes_hbm_est: float = 0.0       # materializing ops only — approximates
+                                     # TPU fusion (dots, scatters, slices,
+                                     # copies, collectives move HBM bytes;
+                                     # elementwise chains are fused away)
+    collective_ring_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transcendental: float = 0.0
+    unknown_loops: int = 0
+
+
+# ops that necessarily materialize operands/results in HBM on TPU
+_MATERIALIZING = {
+    "dot", "convolution", "scatter", "gather", "dynamic-slice",
+    "dynamic-update-slice", "sort", "copy", "concatenate", "pad",
+    "reverse", "transpose", "custom-call",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _dot_flops(ins: Instruction, shape_of: Dict[str, str]) -> float:
+    """2 · result elems · contraction size.  Contraction size = product of
+    lhs contracting dims, read from the lhs operand's shape."""
+    res_elems = _shape_elems(ins.result_text)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    args = re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0])
+    lhs_shape = shape_of.get(args[0], "") if args else ""
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not m or not sm:
+        return 2.0 * res_elems  # degenerate
+    lhs_dims = sm.group(2).split(",") if sm.group(2) else []
+    contract = 1
+    for idx in m.group(1).split(","):
+        if idx.strip() == "":
+            continue
+        i = int(idx)
+        if i < len(lhs_dims):
+            contract *= int(lhs_dims[i])
+    return 2.0 * res_elems * contract
+
+
+def _group_size(rest: str) -> int:
+    g = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if g:
+        return len([t for t in g.group(1).split(",") if t.strip()])
+    gi = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if gi:
+        return int(gi.group(2))
+    return 2
+
+
+def _ring_bytes(kind: str, nbytes: float, n: int) -> float:
+    f = (n - 1) / max(n, 1)
+    if kind == "all-reduce":
+        return 2.0 * nbytes * f
+    if kind == "all-gather":
+        return nbytes * f
+    if kind == "reduce-scatter":
+        return nbytes * (n - 1)
+    if kind == "all-to-all":
+        return nbytes * f
+    return float(nbytes)
+
+
+def analyze(text: str) -> CostTotals:
+    comps, entry = parse_hlo(text)
+    totals = CostTotals()
+    if entry is None:
+        return totals
+
+    import functools
+
+    # per-computation symbol tables: op name -> result bytes / shape text
+    symtabs: Dict[str, Dict[str, int]] = {}
+    shapetabs: Dict[str, Dict[str, str]] = {}
+    for cname, comp in comps.items():
+        tab = dict(comp.params)
+        stab: Dict[str, str] = {}
+        for ins in comp.instructions:
+            tab[ins.name] = ins.result_bytes
+            stab[ins.name] = ins.result_text
+        symtabs[cname] = tab
+        shapetabs[cname] = stab
+
+    @functools.lru_cache(maxsize=None)
+    def comp_cost(name: str):
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, 0.0, 0.0, (), 0)
+        tab = symtabs[name]
+        stab = shapetabs[name]
+        flops = bytes_acc = bytes_hbm = coll = transc = 0.0
+        by_kind: Dict[str, float] = {}
+        unknown = 0
+        for ins in comp.instructions:
+            # -- flops ------------------------------------------------------
+            if ins.op == "dot":
+                flops += _dot_flops(ins, stab)
+            elif ins.op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                            "power", "logistic", "sine", "cosine"):
+                transc += _shape_elems(ins.result_text)
+                flops += _shape_elems(ins.result_text)
+            elif ins.op in _MATH_OPS:
+                flops += _shape_elems(ins.result_text)
+
+            # -- called computations -----------------------------------------
+            if ins.op == "while":
+                body_cond = ins.called_computations()
+                # XLA annotates known trip counts in backend_config
+                trip = None
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                if trip is None:
+                    for c in body_cond:
+                        trip = trip or _find_trip(comps, c)
+                if trip is None:
+                    trip = 1
+                    unknown += 1
+                for c in body_cond:
+                    f2, b2, h2, c2, t2, bk2, u2 = comp_cost(c)
+                    flops += trip * f2
+                    bytes_acc += trip * b2
+                    bytes_hbm += trip * h2
+                    coll += trip * c2
+                    transc += trip * t2
+                    unknown += u2
+                    for k, v in bk2:
+                        by_kind[k] = by_kind.get(k, 0.0) + trip * v
+            elif ins.op in ("fusion", "call", "conditional", "map", "reduce",
+                            "reduce-window", "scatter", "sort", "custom-call",
+                            "async-start"):
+                for c in ins.called_computations():
+                    f2, b2, h2, c2, t2, bk2, u2 = comp_cost(c)
+                    # fusion interiors: count their dot flops but NOT their
+                    # bytes (the fusion boundary is the traffic)
+                    flops += f2
+                    coll += c2
+                    transc += t2
+                    unknown += u2
+                    for k, v in bk2:
+                        by_kind[k] = by_kind.get(k, 0.0) + v
+
+            # -- bytes (fusion-boundary model) --------------------------------
+            if ins.op not in ("parameter", "constant", "get-tuple-element",
+                              "tuple", "bitcast", "while"):
+                operand_bytes = 0
+                # operand names appear as %name tokens before attr list
+                arg_part = ins.rest.split(")")[0]
+                for nm in re.findall(r"%([\w.\-]+)", arg_part):
+                    operand_bytes += tab.get(nm, 0)
+                bytes_acc += ins.result_bytes + operand_bytes
+                if ins.op in _MATERIALIZING:
+                    bytes_hbm += ins.result_bytes + operand_bytes
+
+            # -- collectives ---------------------------------------------------
+            kind = next((k for k in _COLLECTIVES if ins.op.startswith(k)), None)
+            if kind and not ins.op.endswith("-done"):
+                nbytes = ins.result_bytes
+                if ins.op.endswith("-start"):
+                    nbytes //= 2
+                # XLA:CPU promotes bf16 reductions to f32 on the wire
+                # (to_apply=%..._promoted); TPU keeps them bf16 — count at
+                # the unpromoted width.
+                if "_promoted" in ins.rest and "f32" in ins.result_text:
+                    nbytes //= 2
+                rb = _ring_bytes(kind, nbytes, _group_size(ins.rest))
+                coll += rb
+                by_kind[kind] = by_kind.get(kind, 0.0) + rb
+        return (flops, bytes_acc, bytes_hbm, coll, transc,
+                tuple(sorted(by_kind.items())), unknown)
+
+    f, b, h, c, t, bk, u = comp_cost(entry)
+    totals.flops = f
+    totals.bytes_accessed = b
+    totals.bytes_hbm_est = h
+    totals.collective_ring_bytes = c
+    totals.transcendental = t
+    totals.collective_by_kind = dict(bk)
+    totals.unknown_loops = u
+    return totals
+
+
+def top_collectives(text: str, k: int = 12):
+    """The k heaviest collectives, weighted by enclosing loop trip counts.
+
+    Returns [(total_ring_bytes, weight, kind, result_shape, computation)].
+    The §Perf loop's first tool: shows exactly *which* collective dominates.
+    """
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return []
+
+    weights: Dict[str, int] = {entry: 1}
+
+    def visit(name: str, w: int):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instructions:
+            called = ins.called_computations()
+            mult = w
+            if ins.op == "while":
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+                mult = w * (int(tm.group(1)) if tm else 1)
+            for c in called:
+                if c not in weights:
+                    weights[c] = 0
+                weights[c] += mult
+                visit(c, mult)
+
+    visit(entry, 1)
+
+    rows = []
+    for cname, comp in comps.items():
+        w = weights.get(cname, 0)
+        if not w:
+            continue
+        for ins in comp.instructions:
+            kind = next((x for x in _COLLECTIVES if ins.op.startswith(x)), None)
+            if kind is None or ins.op.endswith("-done"):
+                continue
+            nb = ins.result_bytes // (2 if ins.op.endswith("-start") else 1)
+            rb = _ring_bytes(kind, nb, _group_size(ins.rest))
+            rows.append((rb * w, w, kind, ins.result_text[:60], cname[:48]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def _find_trip(comps: Dict[str, Computation], cond_name: str) -> Optional[int]:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    consts = []
+    for ins in cond.instructions:
+        if ins.op == "constant":
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    # the loop bound is the compare constant; with several constants take max
+    return max(consts) if consts else None

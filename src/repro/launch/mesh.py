@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required for the dry-run's forced 512-device
+host platform to initialize first.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    single-pod: 256 chips as (data=16, model=16).
+    multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the "pod"
+    axis is pure data parallelism whose gradient all-reduce crosses the
+    slower inter-pod links (DCN/optical), which is why it is a distinct axis:
+    cross-pod collectives are the ones gradient compression targets.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D data mesh (CPU smoke/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,76 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (§Perf): run one cell with a set of optimizations,
+record the three roofline terms, and append to results/perf_log.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch codeqwen1.5-7b \
+      --shape train_4k --tag it1_bf16cast --perf cast_params_bf16
+  PYTHONPATH=src python -m repro.launch.perf --arch gemma3-1b \
+      --shape train_4k --tag it1_banded --perf banded --perf microbatches=4
+"""
+
+import argparse
+import json
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_perf(items):
+    perf = {}
+    for it in items or []:
+        if "=" in it:
+            k, v = it.split("=", 1)
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+            perf[k] = v
+        else:
+            perf[it] = True
+    return perf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--perf", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/perf_log.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    perf = parse_perf(args.perf)
+    rf, compiled, compile_s = lower_cell(args.arch, args.shape, mesh, perf=perf)
+
+    entry = rf.to_dict()
+    entry.update(tag=args.tag, perf=perf, compile_s=compile_s)
+    log = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            log = json.load(f)
+    log.append(entry)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(log, f, indent=1)
+
+    # print deltas vs any prior entries for the same cell
+    prior = [e for e in log[:-1]
+             if e["arch"] == rf.arch and e["shape"] == rf.shape
+             and e["mesh"] == rf.mesh]
+    if prior:
+        base = prior[0]
+        print(f"\nvs first recorded ({base['tag']}):")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            b, n = base[term], entry[term]
+            print(f"  {term}: {b*1e3:9.2f} ms -> {n*1e3:9.2f} ms "
+                  f"({(n/b - 1)*100:+.1f}%)")
+        print(f"  MFU: {base['mfu']:.4f} -> {entry['mfu']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from sweep JSON.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [results/dryrun_baseline.json]
+Prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+GIB = 2 ** 30
+
+
+def fmt_bytes(b):
+    return f"{b/GIB:.2f}"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+
+    out = []
+    for mesh in sorted({r["mesh"] for r in rows}):
+        out.append(f"\n### Mesh {mesh} "
+                   f"({'single-pod 256 chips' if mesh == '16x16' else '2 pods / 512 chips'})\n")
+        out.append(
+            "| arch | shape | peak GiB (TPU est.) | compute ms | memory ms | "
+            "collective ms | bottleneck | useful | MFU |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for r in [r for r in rows if r["mesh"] == mesh]:
+            if "skipped" in r:
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                           f"SKIP (full attention @500k) | — | — |")
+                continue
+            mem = r.get("memory_per_device") or {}
+            peak = mem.get("peak_tpu_est_bytes", mem.get("peak_bytes", 0))
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {fmt_bytes(peak)} | "
+                f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+                f"{r['collective_s']*1e3:.2f} | {r['bottleneck']} | "
+                f"{r['useful_fraction']:.2f} | {r['mfu']*100:.2f}% |")
+    return "\n".join(out)
+
+
+def summary(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    live = [r for r in rows if "skipped" not in r]
+    skips = [r for r in rows if "skipped" in r]
+    over = [r for r in live
+            if (r.get("memory_per_device") or {}).get("peak_tpu_est_bytes", 0)
+            > 16 * GIB]
+    by_bn = {}
+    for r in live:
+        by_bn[r["bottleneck"]] = by_bn.get(r["bottleneck"], 0) + 1
+    lines = [
+        f"- {len(live)} compiled cells, {len(skips)} documented skips "
+        f"(pure full-attention archs × long_500k).",
+        f"- Cells over the 16 GiB HBM budget (TPU estimate): {len(over)}"
+        + (": " + ", ".join(f"{r['arch']}×{r['shape']}×{r['mesh']}" for r in over)
+           if over else "."),
+        f"- Bottleneck mix: " + ", ".join(f"{k}: {v}" for k, v in
+                                          sorted(by_bn.items())),
+    ]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json"
+    print(summary(p))
+    print(render(p))

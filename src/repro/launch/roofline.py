@@ -1,0 +1,281 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes.  Collective bytes are parsed
+from the compiled HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we take the result tensor
+size and apply the standard ring-cost multiplier over its replica-group
+size.  Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12         # bf16 FLOP/s per chip
+HBM_BW = 819e9              # bytes/s per chip
+LINK_BW = 50e9              # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+
+    @property
+    def ring_bytes(self) -> float:
+        """Bytes over the wire per participating device (ring algorithms)."""
+        n = max(self.group_size, 1)
+        f = (n - 1) / n
+        if self.kind == "all-reduce":
+            return 2.0 * self.result_bytes * f
+        if self.kind == "all-gather":
+            return self.result_bytes * f          # result is the full gather
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * (n - 1)    # result is the scattered part
+        if self.kind == "all-to-all":
+            return self.result_bytes * f
+        if self.kind == "collective-permute":
+            return float(self.result_bytes)
+        return float(self.result_bytes)
+
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+
+
+def _group_size(line: str) -> int:
+    g = _GROUPS_RE.search(line)
+    if g and g.group(1).strip():
+        first = g.group(1).split("}")[0].strip("{} ")
+        return len([t for t in first.split(",") if t.strip() != ""])
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gi:
+        return int(gi.group(2))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done " in line:
+            continue  # avoid double-counting async start/done pairs
+        kind = next(
+            (k for k in _KINDS if f" {k}(" in line or f" {k}-start(" in line),
+            None,
+        )
+        if kind is None:
+            continue
+        # result type(s): everything between '=' and the op name
+        eq = line.find("=")
+        op_pos = line.find(kind, eq)
+        if eq < 0 or op_pos < 0:
+            continue
+        result_part = line[eq + 1 : op_pos]
+        nbytes = 0
+        for dtype, dims in _SHAPE_RE.findall(result_part):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n_elem = 1
+            if dims:
+                for d in dims.split(","):
+                    n_elem *= int(d)
+            nbytes += n_elem * _DTYPE_BYTES[dtype]
+        if nbytes == 0:
+            continue
+        if "-start(" in line:
+            # async start result tuples repeat (input, output) buffers;
+            # count the output half only
+            nbytes //= 2
+        ops.append(CollectiveOp(kind, nbytes, _group_size(line)))
+    return ops
+
+
+def collective_bytes_per_device(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    ops = parse_collectives(hlo_text)
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.ring_bytes
+    return sum(by_kind.values()), by_kind
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float          # per-device ring bytes
+    collective_by_kind: Dict[str, float]
+    model_flops: float               # 6·N_active·D useful flops
+    memory_per_device: Optional[Dict[str, float]] = None
+    xla_flops_once: float = 0.0      # XLA cost_analysis (loop bodies ×1)
+    unknown_loops: int = 0
+    hlo_bytes_upper: float = 0.0     # fusion-boundary bytes (upper bound)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # per-device bytes across that device's links
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips · peak · roofline step time)."""
+        return self.model_flops / (
+            self.chips * PEAK_FLOPS * max(self.step_time_s, 1e-12)
+        )
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "collective_by_kind": self.collective_by_kind,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "mfu": self.mfu,
+            "memory_per_device": self.memory_per_device,
+            "xla_flops_once": self.xla_flops_once,
+            "unknown_loops": self.unknown_loops,
+            "hlo_bytes_upper": self.hlo_bytes_upper,
+        }
+
+
+# ---------------------------------------------------------------------------
+# model FLOPs (6·N·D for dense; 6·N_active·D for MoE; decode: 2·N per token)
+# ---------------------------------------------------------------------------
+def count_params(cfg, *, active_only: bool = False,
+                 flops_weighted: bool = False) -> int:
+    """Parameter count straight from the config (no allocation).
+
+    ``flops_weighted``: count only params that participate in matmuls —
+    the input embedding table is a gather (0 FLOPs/token), so 6·N·D with
+    the raw N over-credits vocab-heavy models.  The LM head (or the tied
+    table, which *is* the head matmul) stays counted."""
+    from ..models.blocks import BlockCfg
+
+    total = cfg.vocab * cfg.d_model  # head matmul (or tied table used as it)
+    if not cfg.tie_embeddings and not flops_weighted:
+        total += cfg.vocab * cfg.d_model  # separate input table (lookup only)
+    for blk in cfg.layer_list:
+        total += _block_params(blk, active_only)
+    total += cfg.d_model  # final norm
+    return total
+
+
+def _block_params(blk, active_only: bool) -> int:
+    n = 0
+    d = None
+    if blk.attn is not None:
+        a = blk.attn
+        d = a.d_model
+        n += a.d_model * a.head_dim * (a.n_heads + 2 * a.n_kv_heads)
+        n += a.n_heads * a.head_dim * a.d_model
+    if blk.rwkv is not None and blk.mixer == "rwkv6":
+        r = blk.rwkv
+        d = r.d_model
+        n += 5 * d * d  # r,k,v,g,out
+        n += 5 * (d * r.lora_mix + r.lora_mix * d)
+        n += d * r.lora_decay + r.lora_decay * d
+        n += 8 * d  # mixes, decay base, bonus, norms
+    if blk.mamba is not None:
+        m = blk.mamba
+        d = m.d_model
+        di = m.d_inner
+        n += d * 2 * di + di * (m.rank + 2 * m.d_state) + m.rank * di
+        n += m.d_conv * di + di * m.d_state + 2 * di + di * d
+    if blk.goom is not None:
+        g = blk.goom
+        d = g.d_model
+        hd, h = g.head_dim, g.n_heads
+        n += d * d  # in_proj
+        n += h * hd * hd * 2 + h * hd * 2 * hd * 2  # A,B + C,D
+        n += d * d  # out_proj
+    if blk.mlp is not None and blk.channel == "mlp":
+        f = blk.mlp.d_ff
+        d = blk.mlp.d_model
+        n += d * f * (3 if blk.mlp.gated else 2)
+    if blk.moe is not None and blk.channel == "moe":
+        mo = blk.moe
+        d = mo.d_model
+        e = mo.top_k if active_only else mo.n_experts
+        n += mo.d_model * mo.n_experts  # router
+        n += e * 3 * d * mo.d_ff
+    if blk.rwkv is not None and blk.channel == "rwkv6_cm":
+        r = blk.rwkv
+        d = r.d_model
+        n += d * r.d_ff * 2 + d * d + 2 * d
+    if d is not None:
+        n += 2 * d  # block norms
+    return n
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D (train); 2·N_active per generated token (decode).
+    N counts matmul-participating params (input-embedding lookups are
+    FLOP-free gathers)."""
+    n_active = count_params(cfg, active_only=True, flops_weighted=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,6 @@
+"""Model substrate: layers, blocks, and the generic decoder LM."""
+
+from .common import Param, unzip, init_tree, Initializer
+from .model import DecoderLM
+
+__all__ = ["Param", "unzip", "init_tree", "Initializer", "DecoderLM"]

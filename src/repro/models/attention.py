@@ -1,0 +1,451 @@
+"""Attention: GQA with RoPE variants, sliding windows, and KV-cache decode.
+
+Training/prefill uses a *chunked flash* implementation — a ``lax.scan`` over
+KV blocks carrying the running (max, denominator, accumulator) triple, so
+activation memory is O(S · block) instead of O(S²).  The online-softmax
+rescaling here is exactly the positive-sign special case of the GOOM LMME
+kernel's online max-rescaling (paper §3.2) — attention over floats is LSE
+over non-negative GOOMs.
+
+Decode attends one new token against a (possibly rolling-buffer) KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import KeyGen, Param, dense_init, dense_apply, scaled_normal
+from .norms import rmsnorm_init, rmsnorm_apply
+from .rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    rotary_fraction: float = 1.0
+    window: Optional[int] = None          # sliding-window size (None = global)
+    qkv_bias: bool = False
+    qk_norm: bool = False                 # gemma3-style q/k RMSNorm
+    mrope_sections: Optional[Tuple[int, ...]] = None  # M-RoPE (half-dim units)
+    query_scale: Optional[float] = None   # override 1/sqrt(head_dim)
+    block_q: int = 512
+    block_kv: int = 1024
+    use_banded: bool = False   # exact 2-block banded SWA (perf; see §Perf)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def attention_init(keygen: KeyGen, cfg: AttentionCfg, dtype=jnp.float32):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "q": dense_init(keygen, d, (h, hd), in_axis="qkv_embed",
+                        out_axes=("heads", "head_dim"), use_bias=cfg.qkv_bias,
+                        dtype=dtype),
+        "k": dense_init(keygen, d, (kvh, hd), in_axis="qkv_embed",
+                        out_axes=("kv_heads", "head_dim"), use_bias=cfg.qkv_bias,
+                        dtype=dtype),
+        "v": dense_init(keygen, d, (kvh, hd), in_axis="qkv_embed",
+                        out_axes=("kv_heads", "head_dim"), use_bias=cfg.qkv_bias,
+                        dtype=dtype),
+        "o": {"w": Param(scaled_normal(axis=0)(keygen(), (h, hd, d), dtype)
+                         / jnp.sqrt(jnp.asarray(hd, dtype)),
+                         ("heads", "head_dim", "embed"))},
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(keygen, hd, dtype)
+        p["k_norm"] = rmsnorm_init(keygen, hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+def _mask_block(q_pos, kv_pos, window):
+    """(Bq, Bk) bool mask: causal + optional sliding window."""
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m = jnp.logical_and(m, kv_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KVH, D)
+    v: jax.Array,  # (B, S, KVH, D)
+    *,
+    q_positions: jax.Array,   # (S,)
+    kv_positions: jax.Array,  # (S_kv,)
+    window: Optional[int],
+    scale: float,
+    block_q: int,
+    block_kv: int,
+) -> jax.Array:
+    """Online-softmax attention, O(S·block) memory, f32 accumulation.
+
+    Custom VJP (FlashAttention-2 style): the backward recomputes each block's
+    scores from (q, k, v, per-row LSE) instead of saving them — without this,
+    differentiating through the KV scan stacks every block's score matrix
+    and activation memory reverts to O(S²)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_kv)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_kv - skv
+
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_k), constant_values=2**30)
+
+    out = _flash(q, k, v, q_positions, kv_positions,
+                 window if window is not None else -1,
+                 scale, block_q, block_kv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def banded_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KVH, D)
+    v: jax.Array,  # (B, S, KVH, D)
+    *,
+    positions: jax.Array,  # (S,)
+    window: int,
+    scale: float,
+) -> jax.Array:
+    """Exact sliding-window attention via two-block bands (Longformer-style).
+
+    Tokens are grouped into blocks of W = window; block i attends to blocks
+    {i-1, i} with the causal+window mask — exact whenever window <= W, at
+    O(S·2W) score FLOPs instead of O(S²).  Used for local/SWA layers when
+    2·window <= S (else the flash path is no worse)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    w = window
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, (0, pad), constant_values=-(2 ** 30))
+
+    qb = q.reshape(b, nb, w, kvh, g, d)
+    kb = k.reshape(b, nb, w, kvh, d)
+    vb = v.reshape(b, nb, w, kvh, d)
+    pos_b = positions.reshape(nb, w)
+
+    # pair each block with its predecessor (block -1 = zeros, fully masked)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    pos_prev = jnp.pad(pos_b, ((1, 0), (0, 0)),
+                       constant_values=-(2 ** 30))[:-1]
+    k_pair = jnp.concatenate([k_prev, kb], axis=2)   # (B, nb, 2W, KVH, D)
+    v_pair = jnp.concatenate([v_prev, vb], axis=2)
+    pos_pair = jnp.concatenate([pos_prev, pos_b], axis=1)  # (nb, 2W)
+
+    scores = jnp.einsum("bnqhgd,bnkhd->bnqhgk", qb, k_pair,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.logical_and(
+        pos_pair[:, None, :] <= pos_b[:, :, None],
+        pos_pair[:, None, :] > pos_b[:, :, None] - w,
+    )  # (nb, W, 2W)
+    scores = jnp.where(mask[None, :, :, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bnqhgk,bnkhd->bnqhgd", (p / l).astype(v_pair.dtype),
+                     v_pair, preferred_element_type=jnp.float32)
+    out = out.reshape(b, nb * w, h, d)
+    return out[:, :s].astype(q.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, qpos, kpos, window, scale, block_q, block_kv):
+    out, _ = _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, block_q, block_kv)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, block_q, block_kv):
+    """Scan over KV blocks with the full query set resident.
+
+    The query head dim stays intact end-to-end (no (kvh, g, block) reshape
+    of sharded dims), so a TP sharding of the heads — including GSPMD's
+    padded uneven sharding for head counts like 28 — propagates through
+    the whole scan.  Score memory is O(S · block_kv) per step, transient.
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nk = skv // block_kv
+    win = None if window < 0 else window
+
+    qg = q.reshape(b, sq, kvh, g, d)
+    kb = k.reshape(b, nk, block_kv, kvh, d).swapaxes(0, 1)
+    vb = v.reshape(b, nk, block_kv, kvh, d).swapaxes(0, 1)
+    kp_b = kpos.reshape(nk, block_kv)
+
+    m0 = jnp.full((b, sq, kvh, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+
+    def kv_step(carry, inp):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, kp = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_block(qpos, kp, win)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        # guards: fully-masked-so-far rows keep p == 0, never NaN
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kp_b))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out = (acc / l_safe[..., None]).reshape(b, sq, h, d)
+    # +1e30 sentinel for empty rows keeps backward p = exp(-inf-1e30) = 0
+    lse = jnp.where(l_f > 0, jnp.where(jnp.isfinite(m_f), m_f, 0.0)
+                    + jnp.log(l_safe), 1e30)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, qpos, kpos, window, scale, block_q, block_kv):
+    out, lse = _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, block_q, block_kv)
+    return out, (q, k, v, qpos, kpos, out, lse)
+
+
+def _flash_bwd(window, scale, block_q, block_kv, res, dout):
+    q, k, v, qpos, kpos, out, lse = res
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nk = skv // block_kv
+    win = None if window < 0 else window
+
+    dout = dout.astype(jnp.float32).reshape(b, sq, kvh, g, d)
+    # D_i = rowsum(dO ⊙ O) per query row
+    delta = jnp.sum(dout * out.astype(jnp.float32).reshape(dout.shape), -1)
+
+    qg = q.reshape(b, sq, kvh, g, d)
+    kb = k.reshape(b, nk, block_kv, kvh, d).swapaxes(0, 1)
+    vb = v.reshape(b, nk, block_kv, kvh, d).swapaxes(0, 1)
+    kp_b = kpos.reshape(nk, block_kv)
+
+    def kv_step(dq, inp):
+        k_blk, v_blk, kp = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask_block(qpos, kp, win)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        p = jnp.exp(s - lse[..., None])              # exact probabilities
+        dv_blk = jnp.einsum("bqhgk,bqhgd->bkhd", p, dout)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dout, v_blk)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds, k_blk)
+        dk_blk = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg)
+        return dq, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros_like(qg, jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(kv_step, dq0, (kb, vb, kp_b))
+    dq = dq.reshape(b, sq, h, d).astype(q.dtype)
+    dk = dk_b.swapaxes(0, 1).reshape(b, skv, kvh, d).astype(k.dtype)
+    dv = dv_b.swapaxes(0, 1).reshape(b, skv, kvh, d).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+def attention_apply(
+    p,
+    x: jax.Array,               # (B, S, d_model)
+    cfg: AttentionCfg,
+    *,
+    positions: jax.Array,       # (B, S) int32 (absolute positions)
+    mrope_positions: Optional[jax.Array] = None,  # (3, B, S) for M-RoPE
+    cache: Optional[Dict[str, jax.Array]] = None,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+
+    q = dense_apply(p["q"], x, compute_dtype=compute_dtype)  # (B,S,H,D)
+    k = dense_apply(p["k"], x, compute_dtype=compute_dtype)  # (B,S,KVH,D)
+    v = dense_apply(p["v"], x, compute_dtype=compute_dtype)
+
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+
+    if cfg.mrope_sections is not None:
+        pos3 = (
+            mrope_positions
+            if mrope_positions is not None
+            else jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        )
+        q = apply_mrope(q, pos3, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+        k = apply_mrope(k, pos3, theta=cfg.rope_theta, sections=cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, theta=cfg.rope_theta,
+                       rotary_fraction=cfg.rotary_fraction)
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       rotary_fraction=cfg.rotary_fraction)
+
+    q = constrain(q, "batch", "act_seq", "act_heads", None)
+    k = constrain(k, "batch", "act_seq", "act_kv_heads", None)
+    v = constrain(v, "batch", "act_seq", "act_kv_heads", None)
+
+    new_cache = None
+    if cache is None:
+        # self-attention over the sequence itself
+        pos1 = positions[0]  # assume shared positions across batch for masking
+        if (cfg.use_banded and cfg.window is not None
+                and 2 * cfg.window <= s):
+            out = banded_attention(q, k, v, positions=pos1,
+                                   window=cfg.window, scale=scale)
+        else:
+            out = flash_attention(
+                q, k, v,
+                q_positions=pos1, kv_positions=pos1,
+                window=cfg.window, scale=scale,
+                block_q=cfg.block_q, block_kv=cfg.block_kv,
+            )
+    elif s > 1:
+        out, new_cache = _prefill_attention(q, k, v, cache, cfg, scale, positions)
+    else:
+        out, new_cache = _decode_attention(q, k, v, cache, cfg, scale)
+
+    out = constrain(out, "batch", "act_seq", "act_heads", None)
+    y = jax.lax.dot_general(
+        out,
+        p["o"]["w"].astype(compute_dtype),
+        (((out.ndim - 2, out.ndim - 1), (0, 1)), ((), ())),
+    )
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+def init_cache(
+    batch: int, cfg: AttentionCfg, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    """Cache for decode.  If ``cfg.window`` is set and smaller than max_len,
+    a rolling buffer of size window is allocated instead (Mistral-style)."""
+    length = max_len if cfg.window is None else min(max_len, cfg.window)
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def _prefill_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale, positions):
+    """Single-shot prefill: write the prompt's K/V into the cache (from its
+    start; rolling buffers keep the window's tail) and run flash attention
+    over the prompt itself."""
+    b, s, _, _ = q.shape
+    length = cache["k"].shape[1]
+    pos1 = positions[0]
+
+    out = flash_attention(
+        q, k_new, v_new,
+        q_positions=pos1, kv_positions=pos1,
+        window=cfg.window, scale=scale,
+        block_q=cfg.block_q, block_kv=cfg.block_kv,
+    )
+
+    if s >= length:
+        # keep the most recent `length` tokens, aligned to their slots
+        tail_k = k_new[:, s - length:, :, :]
+        tail_v = v_new[:, s - length:, :, :]
+        if cfg.window is not None:
+            # rolling buffer: token at absolute pos p sits in slot p % length
+            start = (s - length) % length
+            roll = jnp.roll(tail_k, start, axis=1), jnp.roll(tail_v, start, axis=1)
+            k, v = roll
+        else:
+            k, v = tail_k, tail_v
+        k = k.astype(cache["k"].dtype)
+        v = v.astype(cache["v"].dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0))
+    index = cache["index"] + s
+    return out, {"k": k, "v": v, "index": index}
+
+
+def _decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
+    """One-token decode: write k/v at ``index``, attend over the cache.
+
+    q/k_new/v_new: (B, 1, ·, D).  cache holds (B, L, KVH, D) plus the scalar
+    ``index`` = number of tokens already generated (absolute position).
+    """
+    b, _, h, d = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    length = cache["k"].shape[1]
+    index = cache["index"]  # scalar int32, absolute position of this token
+
+    slot = index % length if cfg.window is not None else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+
+    # absolute position of each cache slot
+    slots = jnp.arange(length, dtype=jnp.int32)
+    if cfg.window is not None:
+        # rolling buffer: slot holds the latest token with that residue
+        # that is <= index (the token just written)
+        abs_pos = index - ((index - slots) % length)
+    else:
+        abs_pos = slots
+    valid = abs_pos <= index
+    if cfg.window is not None:
+        valid = jnp.logical_and(valid, abs_pos > index - cfg.window)
+
+    qg = q.reshape(b, 1, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    l = jnp.sum(p_, axis=-1, keepdims=True)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", (p_ / l).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, d).astype(q.dtype)
+    return out, {"k": k, "v": v, "index": index + 1}

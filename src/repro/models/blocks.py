@@ -1,0 +1,313 @@
+"""Per-layer block assembly: sequence mixer + channel mixer + norms.
+
+A model is a list of *groups*; each group is a repeating *period* of blocks
+scanned ``n_periods`` times with stacked parameters (compile-time stays flat
+no matter how many layers).  Heterogeneous archs (Jamba's 1:7 mamba:attn,
+Gemma3's 5:1 local:global) express their pattern as a multi-block period.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .attention import AttentionCfg, attention_apply, attention_init, init_cache
+from .common import KeyGen, Param, stack_inits, unzip
+from .goom_layer import (
+    GoomSSMCfg,
+    goom_ssm_apply,
+    goom_ssm_init,
+    goom_ssm_init_state,
+)
+from .mlp import MlpCfg, MoeCfg, mlp_apply, mlp_init, moe_apply, moe_init
+from .norms import layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
+from .ssm import (
+    MambaCfg,
+    Rwkv6Cfg,
+    mamba_apply,
+    mamba_init,
+    mamba_init_state,
+    rwkv6_channel_mix_apply,
+    rwkv6_channel_mix_init,
+    rwkv6_init_state,
+    rwkv6_time_mix_apply,
+    rwkv6_time_mix_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    """One layer: a sequence mixer plus a channel mixer, each pre-normed."""
+
+    mixer: str                      # attention | rwkv6 | mamba | goom_ssm | none
+    channel: str                    # mlp | moe | rwkv6_cm | none
+    attn: Optional[AttentionCfg] = None
+    rwkv: Optional[Rwkv6Cfg] = None
+    mamba: Optional[MambaCfg] = None
+    goom: Optional[GoomSSMCfg] = None
+    mlp: Optional[MlpCfg] = None
+    moe: Optional[MoeCfg] = None
+    norm: str = "rms"               # rms | rms_plus_one | ln | ln_nonparam
+    post_norms: bool = False        # gemma3 sandwich norms
+
+
+# ---------------------------------------------------------------------------
+# norms dispatch
+# ---------------------------------------------------------------------------
+def _norm_init(keygen, kind: str, dim: int, dtype):
+    if kind in ("rms", "rms_plus_one"):
+        return rmsnorm_init(keygen, dim, dtype, plus_one=kind == "rms_plus_one")
+    if kind == "ln":
+        return layernorm_init(keygen, dim, dtype)
+    if kind == "ln_nonparam":
+        return layernorm_init(keygen, dim, dtype, elementwise=False)
+    raise ValueError(kind)
+
+
+def _norm_apply(p, x, kind: str):
+    if kind in ("rms", "rms_plus_one"):
+        return rmsnorm_apply(p, x, plus_one=kind == "rms_plus_one")
+    return layernorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def block_init(keygen: KeyGen, blk: BlockCfg, dtype=jnp.float32):
+    p: Dict[str, Any] = {}
+    if blk.mixer != "none":
+        p["mixer_norm"] = _norm_init(keygen, blk.norm, _dim_of(blk), dtype)
+    if blk.mixer == "attention":
+        p["mixer"] = attention_init(keygen, blk.attn, dtype)
+    elif blk.mixer == "rwkv6":
+        p["mixer"] = rwkv6_time_mix_init(keygen, blk.rwkv, dtype)
+    elif blk.mixer == "mamba":
+        p["mixer"] = mamba_init(keygen, blk.mamba, dtype)
+    elif blk.mixer == "goom_ssm":
+        p["mixer"] = goom_ssm_init(keygen, blk.goom, dtype)
+
+    if blk.channel != "none":
+        p["channel_norm"] = _norm_init(keygen, blk.norm, _dim_of(blk), dtype)
+    if blk.channel == "mlp":
+        p["channel"] = mlp_init(keygen, blk.mlp, dtype)
+    elif blk.channel == "moe":
+        p["channel"] = moe_init(keygen, blk.moe, dtype)
+    elif blk.channel == "rwkv6_cm":
+        p["channel"] = rwkv6_channel_mix_init(keygen, blk.rwkv, dtype)
+
+    if blk.post_norms:
+        if blk.mixer != "none":
+            p["mixer_post_norm"] = _norm_init(keygen, blk.norm, _dim_of(blk), dtype)
+        if blk.channel != "none":
+            p["channel_post_norm"] = _norm_init(keygen, blk.norm, _dim_of(blk), dtype)
+    return p
+
+
+def _dim_of(blk: BlockCfg) -> int:
+    for c in (blk.attn, blk.rwkv, blk.mamba, blk.goom, blk.mlp, blk.moe):
+        if c is not None:
+            return c.d_model
+    raise ValueError("empty block")
+
+
+def block_apply(
+    p,
+    x: jax.Array,
+    blk: BlockCfg,
+    *,
+    positions: jax.Array,
+    mrope_positions: Optional[jax.Array],
+    cache: Optional[Dict[str, Any]],
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (x, new_cache, aux_losses)."""
+    aux = {}
+    new_cache: Dict[str, Any] = {}
+
+    if blk.mixer != "none":
+        h = _norm_apply(p["mixer_norm"], x, blk.norm)
+        if blk.mixer == "attention":
+            h, c = attention_apply(
+                p["mixer"], h, blk.attn,
+                positions=positions, mrope_positions=mrope_positions,
+                cache=None if cache is None else cache.get("attn"),
+                compute_dtype=compute_dtype,
+            )
+            if c is not None:
+                new_cache["attn"] = c
+        elif blk.mixer == "rwkv6":
+            h, c = rwkv6_time_mix_apply(
+                p["mixer"], h, blk.rwkv,
+                state=None if cache is None else cache.get("rwkv"),
+                compute_dtype=compute_dtype,
+            )
+            if c is not None:
+                new_cache["rwkv"] = c
+        elif blk.mixer == "mamba":
+            h, c = mamba_apply(
+                p["mixer"], h, blk.mamba,
+                state=None if cache is None else cache.get("mamba"),
+                compute_dtype=compute_dtype,
+            )
+            if c is not None:
+                new_cache["mamba"] = c
+        elif blk.mixer == "goom_ssm":
+            h, c = goom_ssm_apply(
+                p["mixer"], h, blk.goom,
+                state=None if cache is None else cache.get("goom"),
+                compute_dtype=compute_dtype,
+            )
+            if c is not None:
+                new_cache["goom"] = c
+        if blk.post_norms:
+            h = _norm_apply(p["mixer_post_norm"], h, blk.norm)
+        x = x + h.astype(x.dtype)
+        x = constrain(x, "batch", "act_seq", "act_embed")
+
+    if blk.channel != "none":
+        h = _norm_apply(p["channel_norm"], x, blk.norm)
+        if blk.channel == "mlp":
+            h = mlp_apply(p["channel"], h, blk.mlp, compute_dtype=compute_dtype)
+        elif blk.channel == "moe":
+            h, moe_aux = moe_apply(p["channel"], h, blk.moe,
+                                   compute_dtype=compute_dtype)
+            aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()}
+        elif blk.channel == "rwkv6_cm":
+            xp = None if cache is None else cache.get("cm_x_prev")
+            if cache is not None:
+                new_cache["cm_x_prev"] = x[:, -1:]
+            h = rwkv6_channel_mix_apply(p["channel"], h, blk.rwkv,
+                                        x_prev=xp, compute_dtype=compute_dtype)
+        if blk.post_norms:
+            h = _norm_apply(p["channel_post_norm"], h, blk.norm)
+        x = x + h.astype(x.dtype)
+        x = constrain(x, "batch", "act_seq", "act_embed")
+
+    return x, (new_cache or None), aux
+
+
+def block_init_cache(blk: BlockCfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    c: Dict[str, Any] = {}
+    if blk.mixer == "attention":
+        c["attn"] = dict(
+            init_cache(batch, blk.attn, max_len, dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+    elif blk.mixer == "rwkv6":
+        c["rwkv"] = rwkv6_init_state(batch, blk.rwkv)
+    elif blk.mixer == "mamba":
+        c["mamba"] = mamba_init_state(batch, blk.mamba)
+    elif blk.mixer == "goom_ssm":
+        c["goom"] = goom_ssm_init_state(batch, blk.goom)
+    if blk.channel == "rwkv6_cm":
+        c["cm_x_prev"] = jnp.zeros((batch, 1, blk.rwkv.d_model), jnp.float32)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# groups of repeated periods, scanned with stacked params
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GroupCfg:
+    period: Tuple[BlockCfg, ...]
+    n_periods: int
+
+
+def group_init(keygen: KeyGen, grp: GroupCfg, dtype=jnp.float32):
+    def period_init(kg: KeyGen):
+        return {f"b{i}": block_init(kg, blk, dtype)
+                for i, blk in enumerate(grp.period)}
+
+    if grp.n_periods == 1:
+        return period_init(keygen)
+    return stack_inits(period_init, keygen(), grp.n_periods)
+
+
+def group_apply(
+    p,
+    x: jax.Array,
+    grp: GroupCfg,
+    *,
+    positions,
+    mrope_positions,
+    caches,          # stacked over periods, or None
+    compute_dtype=jnp.bfloat16,
+    remat: str = "none",
+):
+    """Returns (x, new_caches, aux).  Scans over periods when n_periods > 1."""
+
+    def period_apply(x, p_period, cache_period):
+        aux_tot: Dict[str, jax.Array] = {}
+        new_caches = {}
+        for i, blk in enumerate(grp.period):
+            ci = None if cache_period is None else cache_period.get(f"b{i}")
+            x, c, aux = block_apply(
+                p_period[f"b{i}"], x, blk,
+                positions=positions, mrope_positions=mrope_positions,
+                cache=ci, compute_dtype=compute_dtype,
+            )
+            if c is not None:
+                new_caches[f"b{i}"] = c
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+        return x, (new_caches or None), aux_tot
+
+    if remat == "full":
+        period_apply = jax.checkpoint(period_apply)
+    elif remat == "dots":
+        period_apply = jax.checkpoint(
+            period_apply,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    if grp.n_periods == 1:
+        return period_apply(x, p, caches)
+
+    if caches is None:
+        def scan_body(x, p_period):
+            x, _, aux = period_apply(x, p_period, None)
+            return x, aux
+
+        x, auxs = jax.lax.scan(scan_body, x, p)
+        aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+        return x, None, aux
+
+    # Caches arrive as a per-period LIST (see model.init_caches): each
+    # period's cache leaves are separate jit arguments, so donation aliases
+    # input->output buffers 1:1 — no stacked-cache double buffering, no
+    # dynamic-update-slice chains XLA might fail to in-place.
+    assert isinstance(caches, (list, tuple)) and len(caches) == grp.n_periods
+
+    if x.shape[1] == 1:
+        # decode: unrolled over periods (per-layer decode graphs are tiny)
+        aux_tot: Dict[str, jax.Array] = {}
+        out_caches = []
+        for i in range(grp.n_periods):
+            p_i = jax.tree.map(lambda v: v[i], p)
+            x, new_c, aux = period_apply(x, p_i, caches[i])
+            out_caches.append(new_c)
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+        return x, out_caches, aux_tot
+
+    # prefill (long sequences): scan over periods — per-layer graphs are
+    # large here, unrolling them would explode compile time; the scan's
+    # stacked-cache double-buffer is acceptable once caches are
+    # head/seq-sharded.
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+
+    def scan_body_c(x, inp):
+        p_period, cache_period = inp
+        x, new_cache, aux = period_apply(x, p_period, cache_period)
+        return x, (new_cache, aux)
+
+    x, (new_stacked, auxs) = jax.lax.scan(scan_body_c, x, (p, stacked))
+    aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), auxs)
+    out_caches = [
+        jax.tree.map(lambda v: v[i], new_stacked) for i in range(grp.n_periods)
+    ]
+    return x, out_caches, aux

@@ -1,0 +1,193 @@
+"""Parameter infrastructure: typed leaves carrying logical sharding axes.
+
+No flax — parameters are nested dicts whose leaves are ``Param(value, axes)``.
+``init`` functions build the annotated tree; ``unzip`` splits it into a plain
+value tree (what train/serve steps carry) and an axes tree (what the sharding
+rules consume).  All inits are jax-traceable so the whole model can be
+``jax.eval_shape``'d for the dry-run without allocating 42B parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf: array (or ShapeDtypeStruct) + logical axis names."""
+
+    value: Any
+    axes: Axes
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree):
+    """Split a Param tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def zip_trees(values, axes):
+    return jax.tree.map(
+        lambda v, a: Param(v, a),
+        values,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(e is None or isinstance(e, str) for e in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# initializers (tiny, optax/flax-free)
+# ---------------------------------------------------------------------------
+Initializer = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def normal(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return stddev * jax.random.normal(key, shape, dtype)
+
+    return init
+
+
+def scaled_normal(axis: int = -2) -> Initializer:
+    """LeCun-style: stddev = 1/sqrt(fan_in) with fan_in = shape[axis]."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[axis] if len(shape) else 1
+        return jax.random.normal(key, shape, dtype) / jnp.sqrt(
+            jnp.asarray(fan_in, dtype)
+        )
+
+    return init
+
+
+def zeros() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    return init
+
+
+def constant(c: float) -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.full(shape, c, dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+class KeyGen:
+    """Splits one PRNGKey into a stream (init-time convenience)."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def init_tree(fn: Callable, key: jax.Array, *args, **kwargs):
+    """Run an init function, returning (values, axes)."""
+    tree = fn(KeyGen(key), *args, **kwargs)
+    return unzip(tree)
+
+
+def stack_inits(fn: Callable, key: jax.Array, n: int, *args, **kwargs):
+    """vmap an init over ``n`` keys -> stacked Param tree with leading dim n.
+
+    The stacked leading axis gets the logical name "layers" (never sharded).
+    """
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        return fn(KeyGen(k), *args, **kwargs)
+
+    stacked = jax.vmap(one)(keys)
+    return jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes), stacked, is_leaf=is_param
+    )
+
+
+# ---------------------------------------------------------------------------
+# dense / einsum layers with logical axes
+# ---------------------------------------------------------------------------
+def dense_init(
+    keygen: KeyGen,
+    in_dim: int,
+    out_dims: Sequence[int],
+    *,
+    in_axis: str = "embed",
+    out_axes: Sequence[Optional[str]] = ("mlp",),
+    use_bias: bool = False,
+    dtype=jnp.float32,
+    init: Optional[Initializer] = None,
+) -> Dict[str, Param]:
+    """Weights for y[..., o1, o2] = x[..., i] @ w[i, o1, o2] (+ b)."""
+    init = init or scaled_normal(axis=0)
+    shape = (in_dim, *out_dims)
+    p = {"w": Param(init(keygen(), shape, dtype), (in_axis, *out_axes))}
+    if use_bias:
+        p["b"] = Param(jnp.zeros(out_dims, dtype), tuple(out_axes))
+    return p
+
+
+def dense_apply(p: Dict[str, jax.Array], x: jax.Array, *, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    cd = compute_dtype or x.dtype
+    n_out = w.ndim - 1
+    y = jax.lax.dot_general(
+        x.astype(cd),
+        w.astype(cd),
+        (((x.ndim - 1,), (0,)), ((), ())),
+    )
+    if "b" in p:
+        y = y + p["b"].astype(cd)
+    return y
+
+
+def dense_general_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    contracting: int = 1,
+    *,
+    compute_dtype=None,
+) -> jax.Array:
+    """Contract the last ``contracting`` dims of x with the first of w."""
+    w = p["w"]
+    cd = compute_dtype or x.dtype
+    lhs_c = tuple(range(x.ndim - contracting, x.ndim))
+    rhs_c = tuple(range(contracting))
+    y = jax.lax.dot_general(x.astype(cd), w.astype(cd), ((lhs_c, rhs_c), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(cd)
+    return y

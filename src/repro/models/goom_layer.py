@@ -1,0 +1,329 @@
+"""The paper's deep RNN layer (§4.3): non-diagonal SSM over GOOMs.
+
+Per head:  x_t = A·x_{t-1} + B·u_t ; y_t = C·x_t + D·u_t  (eq. 25), with the
+recurrence computed over GOOMs via a parallel prefix scan (eq. 26):
+
+    x'_t = LSE( LMME(A', x'_{t-1}), LMME(B', u'_t) )
+
+— no stabilization of any kind.  States are mapped back to floats through
+the scaled exponentiation of eq. 27 (max-shift detached from the graph).
+
+Layer structure (paper §4.3): LayerNorm → linear (heads) → parallel GOOM
+scan → scaled exp → GLU → linear → residual.
+
+The scan is chunked for memory: within a chunk of length L the full
+associative scan runs in parallel (O(log L) depth); the entering state is
+carried sequentially across chunks.  The transition A is time-invariant, so
+the chunk-level compound A^L is shared — the sequential carry costs one
+(heads, d_h, d_h) LMME per chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.goom import Goom, from_goom, to_goom
+from ..core.ops import goom_lse, lmme_reference, scaled_exp
+from ..sharding import constrain
+from .common import KeyGen, Param, dense_init, dense_apply, normal
+from .norms import layernorm_apply, layernorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GoomSSMCfg:
+    d_model: int
+    head_dim: int = 16          # d of the per-head state-space model
+    chunk: int = 128
+    matmul: str = "reference"   # "reference" (paper compromise) | "pallas"
+    scan_variant: str = "shared_a"  # "shared_a" (time-invariant A doubling,
+                                    # §Perf) | "generic" (paper-literal eq.26)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def _matmul_fn(cfg: GoomSSMCfg):
+    if cfg.matmul == "pallas":
+        from ..kernels.lmme import lmme_pallas
+
+        return lmme_pallas
+    return lmme_reference
+
+
+def goom_ssm_init(keygen: KeyGen, cfg: GoomSSMCfg, dtype=jnp.float32):
+    d, hd, h = cfg.d_model, cfg.head_dim, cfg.n_heads
+    # A initialized near-identity with small noise: stable start, free to
+    # grow/shrink during training (the point of the paper).
+    a0 = (
+        jnp.eye(hd, dtype=jnp.float32)[None] * 0.9
+        + 0.1 * jax.random.normal(keygen(), (h, hd, hd)) / jnp.sqrt(hd)
+    ).astype(dtype)
+    return {
+        "ln": layernorm_init(keygen, d, dtype),
+        "in_proj": dense_init(keygen, d, (h, hd), in_axis="embed",
+                              out_axes=("heads", "head_dim"), dtype=dtype),
+        "A": Param(a0, ("heads", "head_dim", "head_dim")),
+        "B": Param(normal(0.5 / hd ** 0.5)(keygen(), (h, hd, hd), dtype),
+                   ("heads", "head_dim", "head_dim")),
+        "C": Param(normal(0.5 / hd ** 0.5)(keygen(), (h, hd, 2 * hd), dtype),
+                   ("heads", "head_dim", "head_dim")),
+        "D": Param(normal(0.5 / hd ** 0.5)(keygen(), (h, hd, 2 * hd), dtype),
+                   ("heads", "head_dim", "head_dim")),
+        "out_proj": dense_init(keygen, h * hd, (d,), in_axis="heads",
+                               out_axes=("embed",), dtype=dtype),
+    }
+
+
+def _goom_ssm_scan_shared_a(
+    a_g: Goom,      # (H, d, d) time-invariant transition, GOOM
+    bu_g: Goom,     # (S, B, H, d, 1) inputs B·u_t, GOOM
+    x0: Optional[Goom],  # (B, H, d, 1) entering state or None
+    chunk: int,
+    matmul,
+) -> Tuple[Goom, Goom]:
+    """Prefix states exploiting the time-invariant A (§Perf, beyond-paper).
+
+    The generic eq.-26 scan compounds (A*, b*) pairs — every combine does a
+    d×d×d LMME whose A-side result is just A^(2^k), identical across all
+    positions and batch.  With constant A, Hillis-Steele doubling on the
+    *vector* side alone computes the same prefix:
+
+        b_i ← LSE( LMME(A^(2^k), b_{i-2^k}), b_i );   A^(2^(k+1)) = (A^(2^k))²
+
+    — one d×d matvec per position per level instead of a d×d×d matmul:
+    ~d× fewer FLOPs and ~d× less scan-state memory, exact same math.
+    """
+    from ..core.goom import finite_floor
+
+    s = bu_g.shape[0]
+    L = min(chunk, s)
+    assert s % L == 0
+    nc = s // L
+    floor = finite_floor(jnp.float32)
+
+    def chunk_prefix(b: Goom) -> Goom:
+        a_pow = a_g
+        k = 1
+        while k < L:
+            pad_shape = (k,) + b.shape[1:]
+            shifted = Goom(
+                jnp.concatenate(
+                    [jnp.full(pad_shape, floor, b.log_abs.dtype),
+                     b.log_abs[:-k]]),
+                jnp.concatenate(
+                    [jnp.ones(pad_shape, b.sign.dtype), b.sign[:-k]]),
+            )
+            contrib = matmul(a_pow, shifted)
+            b = goom_lse(
+                Goom(jnp.stack([contrib.log_abs, b.log_abs]),
+                     jnp.stack([contrib.sign, b.sign])),
+                axis=0,
+            )
+            if 2 * k < L:
+                a_pow = matmul(a_pow, a_pow)
+            k *= 2
+        return b
+
+    if x0 is None:
+        hd = a_g.shape[-1]
+        bsz, h = bu_g.shape[1], bu_g.shape[2]
+        x0 = Goom(jnp.full((bsz, h, hd, 1), floor, jnp.float32),
+                  jnp.ones((bsz, h, hd, 1), jnp.float32))
+
+    def reshape_chunks(g: Goom) -> Goom:
+        return Goom(g.log_abs.reshape((nc, L) + g.shape[1:]),
+                    g.sign.reshape((nc, L) + g.shape[1:]))
+
+    bu_c = reshape_chunks(bu_g)
+
+    @jax.checkpoint
+    def outer(x_carry: Goom, b_chunk: Goom):
+        # fold the carry into the first element: b_1 ← LSE(b_1, A·x0)
+        ax = matmul(a_g, x_carry)  # (B,H,d,1)
+        first = goom_lse(
+            Goom(jnp.stack([ax.log_abs, b_chunk.log_abs[0]]),
+                 jnp.stack([ax.sign, b_chunk.sign[0]])),
+            axis=0,
+        )
+        b_chunk = Goom(
+            b_chunk.log_abs.at[0].set(first.log_abs),
+            b_chunk.sign.at[0].set(first.sign),
+        )
+        states = chunk_prefix(b_chunk)
+        return states[-1], states
+
+    carry = x0
+    carry, states_c = jax.lax.scan(outer, carry, bu_c)
+    states = Goom(
+        states_c.log_abs.reshape((s,) + states_c.shape[2:]),
+        states_c.sign.reshape((s,) + states_c.shape[2:]),
+    )
+    return states, carry
+
+
+def _goom_ssm_scan(
+    a_g: Goom,      # (H, d, d) time-invariant transition, GOOM
+    bu_g: Goom,     # (S, B, H, d, 1) inputs B·u_t, GOOM
+    x0: Optional[Goom],  # (B, H, d, 1) entering state or None
+    chunk: int,
+    matmul,
+) -> Tuple[Goom, Goom]:
+    """All states x'_t, via chunked parallel prefix scan (paper eq. 26).
+
+    Returns (states (S,B,H,d,1), final state (B,H,d,1))."""
+    s = bu_g.shape[0]
+    L = min(chunk, s)
+    assert s % L == 0
+    nc = s // L
+
+    def reshape_chunks(g: Goom) -> Goom:
+        return Goom(
+            g.log_abs.reshape((nc, L) + g.shape[1:]),
+            g.sign.reshape((nc, L) + g.shape[1:]),
+        )
+
+    bu_c = reshape_chunks(bu_g)
+
+    # broadcast A across (L, B): scan elements are (A, B·u_t) pairs
+    def combine(e, l):
+        a_e, b_e = e
+        a_l, b_l = l
+        a = matmul(a_l, a_e)
+        ab = matmul(a_l, b_e)
+        b = goom_lse(
+            Goom(jnp.stack([ab.log_abs, b_l.log_abs]),
+                 jnp.stack([ab.sign, b_l.sign])),
+            axis=0,
+        )
+        return (a, b)
+
+    def chunk_scan(bu_chunk: Goom):
+        lead = bu_chunk.shape[:-2]  # (L, B, H)
+        a_b = Goom(
+            jnp.broadcast_to(a_g.log_abs, lead + a_g.shape[-2:]),
+            jnp.broadcast_to(a_g.sign, lead + a_g.shape[-2:]),
+        )
+        a_star, b_star = jax.lax.associative_scan(
+            combine, (a_b, bu_chunk), axis=0
+        )
+        return a_star, b_star
+
+    def outer(x_carry: Goom, bu_chunk: Goom):
+        a_star, b_star = chunk_scan(bu_chunk)
+        # x_t = A*_t x_carry ⊕ B*_t
+        ax = matmul(a_star, Goom(
+            jnp.broadcast_to(x_carry.log_abs, a_star.shape[:-2] + x_carry.shape[-2:]),
+            jnp.broadcast_to(x_carry.sign, a_star.shape[:-2] + x_carry.shape[-2:]),
+        ))
+        states = goom_lse(
+            Goom(jnp.stack([ax.log_abs, b_star.log_abs]),
+                 jnp.stack([ax.sign, b_star.sign])),
+            axis=0,
+        )
+        return states[-1], states
+
+    if x0 is None:
+        hd = a_g.shape[-1]
+        b, h = bu_g.shape[1], bu_g.shape[2]
+        x0 = to_goom(jnp.zeros((b, h, hd, 1), jnp.float32), use_floor=True)
+
+    carry = x0
+    all_states = []
+    # python loop over chunks keeps each chunk's scan graph small and lets
+    # XLA pipeline them; nc is static. For very long sequences use lax.scan.
+    if nc <= 8:
+        for c in range(nc):
+            carry, states = outer(carry, bu_c[c])
+            all_states.append(states)
+        states = Goom(
+            jnp.concatenate([g.log_abs for g in all_states], axis=0),
+            jnp.concatenate([g.sign for g in all_states], axis=0),
+        )
+        return states, carry
+
+    @jax.checkpoint
+    def scan_body(carry: Goom, bu_chunk: Goom):
+        carry, states = outer(carry, bu_chunk)
+        return carry, states
+
+    carry, states_c = jax.lax.scan(scan_body, carry, bu_c)
+    states = Goom(
+        states_c.log_abs.reshape((s,) + states_c.shape[2:]),
+        states_c.sign.reshape((s,) + states_c.shape[2:]),
+    )
+    return states, carry
+
+
+def goom_ssm_apply(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg: GoomSSMCfg,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    matmul = _matmul_fn(cfg)
+
+    xin = layernorm_apply(p["ln"], x)
+    u = dense_apply(p["in_proj"], xin, compute_dtype=jnp.float32)  # (B,S,H,hd)
+    u = constrain(u, "batch", "act_seq", "act_heads", None)
+
+    # map to GOOMs (paper: z' <- log z for all inputs/parameters)
+    a_g = to_goom(p["A"].astype(jnp.float32), use_floor=True)
+    b_g = to_goom(p["B"].astype(jnp.float32), use_floor=True)
+    u_g = to_goom(u, use_floor=True)
+
+    # B·u_t over GOOMs: (H,hd,hd) x (B,S,H,hd,1) -> LMME per head
+    u_col = Goom(
+        u_g.log_abs.transpose(1, 0, 2, 3)[..., None],   # (S,B,H,hd,1)
+        u_g.sign.transpose(1, 0, 2, 3)[..., None],
+    )
+    bu = matmul(b_g, u_col)  # broadcast (H,hd,hd) @ (S,B,H,hd,1)
+
+    x0 = None
+    if state is not None:
+        x0 = Goom(state["x_log"], state["x_sign"])
+
+    scan_fn = (_goom_ssm_scan_shared_a if cfg.scan_variant == "shared_a"
+               else _goom_ssm_scan)
+    states, final = scan_fn(a_g, bu, x0, cfg.chunk, matmul)
+
+    # back to floats via scaled exp (paper eq. 27), per position
+    xs = Goom(
+        states.log_abs[..., 0].transpose(1, 0, 2, 3),  # (B,S,H,hd)
+        states.sign[..., 0].transpose(1, 0, 2, 3),
+    )
+    vals, _ = scaled_exp(xs, axis=(-2, -1), shift=2.0)
+
+    # y = C x + D u over floats (paper: remaining layer computation is
+    # conventional), then GLU over 2*hd and output projection
+    y = jnp.einsum("bshd,hde->bshe", vals.astype(compute_dtype),
+                   p["C"].astype(compute_dtype))
+    y = y + jnp.einsum("bshd,hde->bshe", u.astype(compute_dtype),
+                       p["D"].astype(compute_dtype))
+    y1, y2 = jnp.split(y, 2, axis=-1)
+    y = y1 * jax.nn.sigmoid(y2)  # GLU
+    y = y.reshape(b, s, h * hd)
+    out = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"x_log": final.log_abs, "x_sign": final.sign}
+    return out, new_state
+
+
+def goom_ssm_init_state(batch: int, cfg: GoomSSMCfg):
+    from ..core.goom import finite_floor
+
+    shape = (batch, cfg.n_heads, cfg.head_dim, 1)
+    return {
+        "x_log": jnp.full(shape, finite_floor(jnp.float32), jnp.float32),
+        "x_sign": jnp.ones(shape, jnp.float32),
+    }

@@ -1,0 +1,172 @@
+"""Feed-forward layers: gated MLPs (SwiGLU/GeGLU/ReLU²) and top-k MoE.
+
+MoE uses capacity-based gather dispatch (GShard-style, token-dropping):
+tokens are routed to their top-k experts, packed into per-expert buffers of
+capacity C = ceil(k · T · cf / E), processed as one batched einsum
+(E, C, d) × (E, d, f), and combined with the router weights.  Expert
+parallelism: the expert dim maps to the "data" mesh axis when divisible
+(XLA inserts the all-to-alls); each expert's hidden dim is TP-sharded over
+"model" either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import KeyGen, Param, dense_init, dense_apply, scaled_normal
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"      # silu | gelu | relu2
+    gated: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeCfg:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    router_z_loss: float = 1e-3
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def mlp_init(keygen: KeyGen, cfg: MlpCfg, dtype=jnp.float32):
+    p = {
+        "up": dense_init(keygen, cfg.d_model, (cfg.d_ff,), in_axis="embed",
+                         out_axes=("mlp",), dtype=dtype),
+        "down": dense_init(keygen, cfg.d_ff, (cfg.d_model,), in_axis="mlp",
+                           out_axes=("embed",), dtype=dtype),
+    }
+    if cfg.gated:
+        p["gate"] = dense_init(keygen, cfg.d_model, (cfg.d_ff,),
+                               in_axis="embed", out_axes=("mlp",), dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x: jax.Array, cfg: MlpCfg, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    act = _act(cfg.activation)
+    h = dense_apply(p["up"], x, compute_dtype=compute_dtype)
+    if cfg.gated:
+        h = act(dense_apply(p["gate"], x, compute_dtype=compute_dtype)) * h
+    else:
+        h = act(h)
+    h = constrain(h, "batch", "act_seq", "act_mlp")
+    return dense_apply(p["down"], h, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+def moe_init(keygen: KeyGen, cfg: MoeCfg, dtype=jnp.float32):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    w = scaled_normal(axis=-2)
+
+    def expert_w(shape, axes):
+        return Param(w(keygen(), shape, dtype), axes)
+
+    return {
+        "router": dense_init(keygen, d, (e,), in_axis="embed", out_axes=(None,),
+                             dtype=jnp.float32, init=scaled_normal(axis=0)),
+        "gate": expert_w((e, d, f), ("expert", "embed", "expert_mlp")),
+        "up": expert_w((e, d, f), ("expert", "embed", "expert_mlp")),
+        "down": expert_w((e, f, d), ("expert", "expert_mlp", "embed")),
+    }
+
+
+def moe_apply(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg: MoeCfg,
+    *,
+    compute_dtype=jnp.bfloat16,
+):
+    """Returns (output, aux) with aux = {load_balance_loss, router_z_loss}.
+
+    Dispatch is per batch row (vmapped), so the slot-assignment cumsum never
+    crosses the data-sharded batch dim — dispatch is collective-free; the
+    expert einsum's (B→data, E→data) resharding is where the all-to-all
+    appears, which is the EP communication pattern we want XLA to schedule.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(math.ceil(k * s * cfg.capacity_factor / e)))
+    act = _act(cfg.activation)
+
+    logits = dense_apply(p["router"], x.astype(jnp.float32))   # (B, S, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (B, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- aux losses (Switch-style load balance + z-loss) -------------------
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = cfg.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+
+    # --- per-row capacity dispatch (token dropping) -------------------------
+    def dispatch_row(xr, idx_r, gate_r):
+        # xr (S, d), idx_r (S, k), gate_r (S, k)
+        flat_expert = idx_r.reshape(-1)                        # (S*k,)
+        flat_gate = gate_r.reshape(-1)
+        flat_token = jnp.repeat(jnp.arange(s), k)
+        onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)
+        slot = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+        keep = slot < cap
+        dst = jnp.where(keep, flat_expert * cap + slot, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), compute_dtype)
+        buf = buf.at[dst].set(xr.astype(compute_dtype)[flat_token])
+        return buf[:-1].reshape(e, cap, d), (dst, keep, flat_token, flat_gate)
+
+    buf, (dst, keep, flat_token, flat_gate) = jax.vmap(dispatch_row)(
+        x, expert_idx, gate_vals
+    )  # buf: (B, E, C, d)
+    buf = constrain(buf, "batch", "act_expert", None, None)
+
+    # batched expert FFN: (B, E, C, d) x (E, d, f)
+    g = jnp.einsum("becd,edf->becf", buf, p["gate"].astype(compute_dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["up"].astype(compute_dtype))
+    h = act(g) * u
+    h = constrain(h, "batch", "act_expert", None, "act_mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["down"].astype(compute_dtype))
+    out_buf = out_buf.reshape(b, e * cap, d)
+
+    def combine_row(ob, dst_r, keep_r, tok_r, gate_r):
+        gathered = jnp.where(
+            keep_r[:, None], ob[jnp.clip(dst_r, 0, e * cap - 1)], 0.0
+        )
+        out = jnp.zeros((s, d), jnp.float32)
+        return out.at[tok_r].add(gathered.astype(jnp.float32) * gate_r[:, None])
+
+    out = jax.vmap(combine_row)(out_buf, dst, keep, flat_token, flat_gate)
+    out = out.astype(compute_dtype)
+    aux = {"load_balance_loss": lb_loss, "router_z_loss": z_loss}
+    return out, aux

@@ -1,0 +1,249 @@
+"""DecoderLM: the generic decoder-only model assembled from a config.
+
+Covers all ten assigned architectures plus the paper's GOOM-RNN: dense /
+MoE / SSM / hybrid / VLM-backbone / audio-backbone, via the group/period
+block machinery in ``blocks.py``.
+
+Modality frontends are stubs per the assignment: ``prefix_embeds`` carries
+precomputed patch/frame embeddings that are added onto the first P token
+positions (the backbone is what we build and measure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .blocks import GroupCfg, block_init_cache, group_apply, group_init
+from .common import KeyGen, Param, dense_init, dense_apply, normal, unzip
+from .norms import layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
+from .rope import sinusoidal_embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    vocab: int
+    d_model: int
+    n_layers: int
+    groups: Tuple[GroupCfg, ...]
+    tie_embeddings: bool = False
+    scale_embedding: bool = False  # gemma: multiply embeddings by sqrt(d)
+    final_norm: str = "rms"        # rms | rms_plus_one | ln | ln_nonparam
+    pos_embedding: str = "none"    # none | sinusoidal
+    frontend: Optional[str] = None  # vlm | audio (stubbed)
+    n_prefix: int = 0              # frontend embedding positions
+    mrope: bool = False
+    sub_quadratic: bool = False    # supports long_500k decode
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"            # none | dots | full
+    logit_chunk: int = 512         # CE computed in seq chunks of this size
+
+    @property
+    def layer_list(self):
+        out = []
+        for g in self.groups:
+            out.extend(list(g.period) * g.n_periods)
+        return out
+
+
+class DecoderLM:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------
+    def init(self, key: jax.Array):
+        """Returns the annotated Param tree (use ``unzip`` to split)."""
+        cfg = self.cfg
+        kg = KeyGen(key)
+        p: Dict[str, Any] = {
+            "embed": Param(
+                normal(0.02)(kg(), (cfg.vocab, cfg.d_model), cfg.param_dtype),
+                ("vocab", "embed"),
+            ),
+            "final_norm": _final_norm_init(kg, cfg),
+        }
+        for i, g in enumerate(cfg.groups):
+            p[f"group_{i}"] = group_init(kg, g, cfg.param_dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(
+                kg, cfg.d_model, (cfg.vocab,), in_axis="embed",
+                out_axes=("vocab",), dtype=cfg.param_dtype,
+            )
+        return p
+
+    def init_shapes(self, key: jax.Array):
+        """(ShapeDtypeStruct tree, axes tree) without allocating — dry-run."""
+        tree = jax.eval_shape(self.init, key)
+        return unzip(tree)
+
+    # -- forward ------------------------------------------------------------
+    def hidden_states(
+        self,
+        params,
+        tokens: jax.Array,               # (B, S)
+        *,
+        prefix_embeds: Optional[jax.Array] = None,  # (B, P, d)
+        positions: Optional[jax.Array] = None,      # (B, S)
+        mrope_positions: Optional[jax.Array] = None,  # (3, B, S)
+        caches: Optional[List[Any]] = None,
+    ):
+        cfg = self.cfg
+        b, s = tokens.shape
+        cd = cfg.compute_dtype
+
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        x = params["embed"][tokens].astype(cd)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(jnp.sqrt(cfg.d_model), cd)
+        if prefix_embeds is not None:
+            pfx = prefix_embeds.astype(cd)
+            pad = s - pfx.shape[1]
+            if pad < 0:
+                raise ValueError("prefix longer than sequence")
+            pfx = jnp.pad(pfx, ((0, 0), (0, pad), (0, 0)))
+            x = x + pfx
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_embedding(positions, cfg.d_model).astype(cd)
+        x = constrain(x, "batch", "act_seq", "act_embed")
+
+        aux_tot: Dict[str, jax.Array] = {}
+        new_caches: List[Any] = []
+        for i, g in enumerate(cfg.groups):
+            ci = None if caches is None else caches[i]
+            x, nc, aux = group_apply(
+                params[f"group_{i}"], x, g,
+                positions=positions, mrope_positions=mrope_positions,
+                caches=ci, compute_dtype=cd,
+                remat=cfg.remat if caches is None else "none",
+            )
+            new_caches.append(nc)
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+
+        x = _final_norm_apply(params["final_norm"], x, cfg)
+        return x, (new_caches if caches is not None else None), aux_tot
+
+    def _head_weight(self, params):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return params["embed"].T  # (d, vocab)
+        return params["lm_head"]["w"]
+
+    def logits(self, params, hidden: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = self._head_weight(params).astype(cfg.compute_dtype)
+        out = hidden @ w
+        return constrain(out, "batch", "act_seq", "act_vocab")
+
+    def apply(self, params, tokens, **kw):
+        """Full forward to logits.  Returns (logits, caches, aux)."""
+        h, caches, aux = self.hidden_states(params, tokens, **kw)
+        return self.logits(params, h), caches, aux
+
+    # -- training loss -------------------------------------------------------
+    def loss(
+        self,
+        params,
+        tokens: jax.Array,   # (B, S)
+        labels: jax.Array,   # (B, S), -1 = masked
+        **kw,
+    ):
+        """Next-token CE, computed in sequence chunks to bound logits memory."""
+        cfg = self.cfg
+        h, _, aux = self.hidden_states(params, tokens, **kw)
+        w = self._head_weight(params).astype(cfg.compute_dtype)
+
+        b, s, d = h.shape
+        ck = min(cfg.logit_chunk, s)
+        assert s % ck == 0
+        nc = s // ck
+        h_c = h.reshape(b, nc, ck, d).swapaxes(0, 1)        # (nc, B, ck, d)
+        y_c = labels.reshape(b, nc, ck).swapaxes(0, 1)
+
+        def chunk_loss(carry, inp):
+            hc, yc = inp
+            logits = (hc @ w).astype(jnp.float32)            # (B, ck, V)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(yc, 0)[..., None], axis=-1
+            )[..., 0]
+            mask = (yc >= 0).astype(jnp.float32)
+            nll = (logz - gold) * mask
+            tot, cnt = carry
+            return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(chunk_loss), (jnp.zeros(()), jnp.zeros(())), (h_c, y_c)
+        )
+        ce = tot / jnp.maximum(cnt, 1.0)
+
+        loss = ce
+        metrics = {"ce_loss": ce, "tokens": cnt}
+        if "load_balance_loss" in aux:
+            loss = loss + 0.01 * aux["load_balance_loss"]
+            metrics["load_balance_loss"] = aux["load_balance_loss"]
+        if "router_z_loss" in aux:
+            loss = loss + aux["router_z_loss"]
+            metrics["router_z_loss"] = aux["router_z_loss"]
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving -------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int):
+        """Per-group, per-period cache lists (leaves alias 1:1 under jit
+        donation — see blocks.group_apply)."""
+        caches = []
+        for g in self.cfg.groups:
+            def period_cache(_=None):
+                return {
+                    f"b{i}": c
+                    for i, blk in enumerate(g.period)
+                    if (c := block_init_cache(blk, batch, max_len))
+                }
+
+            if g.n_periods == 1:
+                caches.append(period_cache())
+            else:
+                caches.append([period_cache() for _ in range(g.n_periods)])
+        return caches
+
+    def prefill(self, params, tokens, caches, **kw):
+        """Process a prompt, filling caches.  Returns (last_logits, caches)."""
+        h, caches, _ = self.hidden_states(params, tokens, caches=caches, **kw)
+        return self.logits(params, h[:, -1:]), caches
+
+    def decode_step(self, params, token, caches, index, **kw):
+        """One decode step: token (B,1), index scalar absolute position."""
+        b = token.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(index, jnp.int32)[None, None], (b, 1)
+        )
+        mrope = kw.pop("mrope_positions", None)
+        if self.cfg.mrope and mrope is None:
+            mrope = jnp.broadcast_to(positions[None], (3, b, 1))
+        h, caches, _ = self.hidden_states(
+            params, token, positions=positions, mrope_positions=mrope,
+            caches=caches, **kw,
+        )
+        return self.logits(params, h), caches
+
+
+def _final_norm_init(kg: KeyGen, cfg: LMConfig):
+    from .blocks import _norm_init
+
+    return _norm_init(kg, cfg.final_norm, cfg.d_model, cfg.param_dtype)
+
+
+def _final_norm_apply(p, x, cfg: LMConfig):
+    from .blocks import _norm_apply
+
+    return _norm_apply(p, x, cfg.final_norm)

@@ -1,0 +1,46 @@
+"""Normalization layers: RMSNorm, LayerNorm, and OLMo's non-parametric LN."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, Param
+
+
+def rmsnorm_init(keygen: KeyGen, dim: int, dtype=jnp.float32, *, plus_one: bool = False):
+    """RMSNorm scale.  ``plus_one``: gemma-style (1 + w) parameterization."""
+    return {"scale": Param(jnp.zeros((dim,), dtype) if plus_one else jnp.ones((dim,), dtype), ("norm",))}
+
+
+def rmsnorm_apply(p, x: jax.Array, *, eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if plus_one else scale
+    return (y * scale).astype(dt)
+
+
+def layernorm_init(keygen: KeyGen, dim: int, dtype=jnp.float32, *, elementwise: bool = True):
+    if not elementwise:
+        return {}
+    return {
+        "scale": Param(jnp.ones((dim,), dtype), ("norm",)),
+        "bias": Param(jnp.zeros((dim,), dtype), ("norm",)),
+    }
+
+
+def layernorm_apply(p, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with empty params this is OLMo's non-parametric LN."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)

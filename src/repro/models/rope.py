@@ -1,0 +1,103 @@
+"""Rotary position embeddings: standard, partial, dual-base, and M-RoPE.
+
+M-RoPE (Qwen2-VL, arXiv:2409.12191) splits the head dim into three sections
+(temporal / height / width) and rotates each section with its own position
+stream.  For text tokens all three streams are equal, recovering 1-D RoPE.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0, dtype=jnp.float32) -> jax.Array:
+    """Inverse frequencies for the rotating half (head_dim // 2 entries)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return (1.0 / (theta ** exponent)).astype(dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float = 10000.0) -> jax.Array:
+    """(..., S) int positions -> (..., S, head_dim//2) angles."""
+    inv = rope_frequencies(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10000.0,
+    rotary_fraction: float = 1.0,
+) -> jax.Array:
+    """Rotate ``x``: (B, S, H, D) with positions (B, S).
+
+    ``rotary_fraction`` < 1 rotates only the first fraction of D (GLM-style
+    partial rotary); the remainder passes through unrotated.
+    """
+    d = x.shape[-1]
+    rot_d = int(d * rotary_fraction)
+    rot_d -= rot_d % 2
+    if rot_d == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+
+    ang = rope_angles(positions, rot_d, theta)  # (B, S, rot_d//2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # (B, S, 1, rot_d//2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions3: jax.Array,
+    *,
+    theta: float = 1_000_000.0,
+    sections: Sequence[int] = (16, 24, 24),
+) -> jax.Array:
+    """M-RoPE: x (B, S, H, D); positions3 (3, B, S) = (temporal, h, w).
+
+    ``sections`` are in *half-dim* units (sum == D//2), Qwen2-VL convention
+    (16, 24, 24) for head_dim 128.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+
+    inv = rope_frequencies(d, theta)  # (half,)
+    # angles per position stream: (3, B, S, half)
+    ang = positions3.astype(jnp.float32)[..., None] * inv
+    # select which stream drives each frequency slot
+    idx = jnp.concatenate(
+        [jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)]
+    )  # (half,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),  # (B, S, half, 3)
+        idx[None, None, :, None],
+        axis=-1,
+    )[..., 0]  # (B, S, half)
+
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # (B, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_embedding(positions: jax.Array, dim: int, *, max_period: float = 10000.0) -> jax.Array:
+    """Classic transformer sinusoidal embeddings (MusicGen positions)."""
+    half = dim // 2
+    freqs = jnp.exp(
+        -jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb

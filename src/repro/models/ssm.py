@@ -1,0 +1,424 @@
+"""State-space blocks: RWKV6 (Finch) and Mamba — with GOOM-backed scans.
+
+Both blocks reduce to a *diagonal linear recurrence with data-dependent
+decay*:  ``h_t = a_t ⊙ h_{t-1} + b_t`` where ``a_t = exp(log_a_t)``.  Both
+parameterize the decay *in log space natively* (RWKV6: ``log a = -exp(w)``;
+Mamba: ``log a = Δ_t · A``), so the GOOM representation (paper §2) is exact:
+no exp/log round-trip, no clamping of the decay — the paper's pitch realized.
+
+Training uses the chunked (GLA-style) form: states are materialized only at
+chunk boundaries; within a chunk the contribution is computed with matmuls.
+The intra-chunk score matrix involves ratios of decay cumprods ``A_i / A_j``
+that overflow floats when the decay is strong — ``scan_impl="goom"`` computes
+those contractions as LMME over GOOMs (paper §3.2), while
+``scan_impl="float"`` is the conventional baseline (what standard
+implementations do, with the usual clamps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.goom import Goom, from_goom, nonzero_sign, safe_abs, safe_log
+from ..core.ops import lmme_reference
+from ..sharding import constrain
+from .common import KeyGen, Param, dense_init, dense_apply, normal, scaled_normal
+from .norms import rmsnorm_apply, rmsnorm_init
+
+
+# ===========================================================================
+# shared chunked diagonal scan
+# ===========================================================================
+def segment_states(
+    log_a: jax.Array,  # (L, ...) per-step log-decay (finite, typically <= 0)
+    b: jax.Array,      # (L, ...) signed inputs
+    h0: jax.Array,     # (...,)   entering state
+    impl: str = "goom",
+):
+    """All states of h_t = exp(log_a_t)·h_{t-1} + b_t within one chunk.
+
+    impl="goom": associative scan in (log, sign) planes — the paper's §4.3
+    recurrence machinery, exact for any decay magnitude.
+    impl="float": conventional scan; decays exp'd up front.
+    Returns (states (L, ...), final state (...,)).
+    """
+    if impl == "goom":
+        def combine(e, l):
+            ea_l, eb_l, eb_s = e
+            la_l, lb_l, lb_s = l
+            a_l = la_l + ea_l
+            t_l = la_l + eb_l  # a_later * b_earlier (log-mag)
+            m = jnp.maximum(t_l, lb_l)
+            m_safe = jnp.where(m > -jnp.inf, m, 0.0)
+            t = eb_s * jnp.exp(t_l - m_safe) + lb_s * jnp.exp(lb_l - m_safe)
+            return (a_l, safe_log(safe_abs(t)) + m_safe, nonzero_sign(t))
+
+        b_l, b_s = safe_log(safe_abs(b)), nonzero_sign(b)
+        a_star_l, b_star_l, b_star_s = jax.lax.associative_scan(
+            combine, (log_a, b_l, b_s), axis=0
+        )
+        # h_t = A*_t · h0 + B*_t  (back in float domain: states feed matmuls)
+        states = jnp.exp(a_star_l) * h0[None] + b_star_s * jnp.exp(b_star_l)
+        return states, states[-1]
+
+    a = jnp.exp(log_a)
+
+    def combine(e, l):
+        return (l[0] * e[0], l[0] * e[1] + l[1])
+
+    a_star, b_star = jax.lax.associative_scan(combine, (a, b), axis=0)
+    states = a_star * h0[None] + b_star
+    return states, states[-1]
+
+
+# ===========================================================================
+# RWKV6 (Finch) — arXiv:2404.05892
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class Rwkv6Cfg:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_mix: int = 32
+    lora_decay: int = 64
+    chunk: int = 128
+    scan_impl: str = "goom"  # "goom" (paper) | "float" (baseline)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def _lora_init(keygen: KeyGen, d: int, rank: int, out: int, dtype):
+    return {
+        "a": Param(normal(0.01)(keygen(), (d, rank), dtype), ("embed", None)),
+        "b": Param(jnp.zeros((rank, out), dtype), (None, "embed")),
+    }
+
+
+def _lora_apply(p, x, *, activation=jnp.tanh):
+    return activation(x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+
+
+def rwkv6_time_mix_init(keygen: KeyGen, cfg: Rwkv6Cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    mix_names = ["w", "k", "v", "r", "g"]
+    p = {
+        "mu_x": Param(jnp.full((d,), 0.5, dtype), ("embed",)),
+        "mu": {m: Param(jnp.full((d,), 0.5, dtype), ("embed",)) for m in mix_names},
+        "lora": {m: _lora_init(keygen, d, cfg.lora_mix, d, dtype) for m in mix_names},
+        "decay_base": Param(
+            -5.0 + jax.random.uniform(keygen(), (d,), dtype), ("embed",)
+        ),
+        "decay_lora": _lora_init(keygen, d, cfg.lora_decay, d, dtype),
+        "bonus": Param(normal(0.1)(keygen(), (cfg.n_heads, cfg.head_dim), dtype),
+                       ("heads", "head_dim")),
+        "r": dense_init(keygen, d, (d,), in_axis="qkv_embed", out_axes=("heads",), dtype=dtype),
+        "k": dense_init(keygen, d, (d,), in_axis="qkv_embed", out_axes=("heads",), dtype=dtype),
+        "v": dense_init(keygen, d, (d,), in_axis="qkv_embed", out_axes=("heads",), dtype=dtype),
+        "g": dense_init(keygen, d, (d,), in_axis="qkv_embed", out_axes=("heads",), dtype=dtype),
+        "out": dense_init(keygen, d, (d,), in_axis="heads", out_axes=("embed",), dtype=dtype),
+        "ln_x": rmsnorm_init(keygen, d, dtype),  # per-head group norm stand-in
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} along the sequence; first step uses x_prev (cache) or zeros."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix_apply(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg: Rwkv6Cfg,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # decode cache
+    compute_dtype=jnp.bfloat16,
+):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cd = compute_dtype
+
+    x_prev = None if state is None else state["x_prev"]
+    xs = _token_shift(x, x_prev)
+    dx = xs - x
+
+    # data-dependent lerp (ddlerp) per stream
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+
+    def mix(m):
+        mu_dyn = p["mu"][m].astype(x.dtype) + _lora_apply(p["lora"][m], xxx)
+        return x + dx * mu_dyn
+
+    xw, xk, xv, xr, xg = (mix(m) for m in ["w", "k", "v", "r", "g"])
+
+    r = dense_apply(p["r"], xr, compute_dtype=cd).reshape(b, s, h, hd)
+    k = dense_apply(p["k"], xk, compute_dtype=cd).reshape(b, s, h, hd)
+    v = dense_apply(p["v"], xv, compute_dtype=cd).reshape(b, s, h, hd)
+    g = jax.nn.silu(dense_apply(p["g"], xg, compute_dtype=cd))
+
+    # log-decay, exact in log space: log a = -exp(w)  (always < 0)
+    w = p["decay_base"].astype(jnp.float32) + _lora_apply(
+        p["decay_lora"], xw.astype(jnp.float32)
+    )
+    log_a = -jnp.exp(w).reshape(b, s, h, hd)  # (B,S,H,K) decay on the k-dim
+
+    u = p["bonus"].astype(jnp.float32)
+
+    y, new_state = _rwkv6_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_a, u, cfg,
+        h0=None if state is None else state["wkv"],
+    )
+
+    y = rmsnorm_apply(p["ln_x"], y.reshape(b, s, d)).astype(cd) * g
+    out = dense_apply(p["out"], y, compute_dtype=cd)
+    if state is not None:
+        new_state = {"x_prev": x[:, -1:], "wkv": new_state}
+    return out, new_state
+
+
+def _rwkv6_scan(r, k, v, log_a, u, cfg: Rwkv6Cfg, h0=None):
+    """Chunked WKV: y_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ);
+    S_t = diag(a_t) S_{t-1} + k_t v_tᵀ.   All args f32.
+
+    r,k,v: (B,S,H,D);  log_a: (B,S,H,D);  u: (H,D).
+    Returns (y (B,S,H,D), final state (B,H,D,D))."""
+    b, s, h, dk = r.shape
+    L = min(cfg.chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    dv = v.shape[-1]
+
+    rc = r.reshape(b, nc, L, h, dk).transpose(1, 0, 3, 2, 4)   # (nc,B,H,L,D)
+    kc = k.reshape(b, nc, L, h, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, L, h, dv).transpose(1, 0, 3, 2, 4)
+    lac = log_a.reshape(b, nc, L, h, dk).transpose(1, 0, 3, 2, 4)
+
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32) if h0 is None else h0
+
+    use_goom = cfg.scan_impl == "goom"
+
+    @jax.checkpoint
+    def chunk_step(S, inp):
+        rb, kb, vb, la = inp  # (B,H,L,D)
+        cum = jnp.cumsum(la, axis=-2)                 # (B,H,L,D) log A_i
+        cum_prev = cum - la                           # log A_{i-1}
+        total = cum[..., -1:, :]                      # (B,H,1,D) log A_L
+
+        if use_goom:
+            # scores over GOOMs: log r~ = log|r| + cumprev; log k~ = log|k| - cum
+            rg = Goom(safe_log(safe_abs(rb)) + cum_prev, nonzero_sign(rb))
+            kg = Goom(safe_log(safe_abs(kb)) - cum, nonzero_sign(kb))
+            scores_g = lmme_reference(rg, Goom(kg.log_abs, kg.sign).mT)
+            scores = from_goom(scores_g)              # (B,H,L,L)
+            k_rem_g = Goom(safe_log(safe_abs(kb)) + (total - cum), nonzero_sign(kb))
+            k_rem = from_goom(k_rem_g)
+        else:
+            r_t = rb * jnp.exp(cum_prev)
+            k_t = kb * jnp.exp(-cum)
+            scores = jnp.einsum("bhik,bhjk->bhij", r_t, k_t)
+            k_rem = kb * jnp.exp(total - cum)
+
+        # strictly-causal mask (current token handled by the bonus term)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+
+        y_intra = jnp.einsum("bhij,bhjv->bhiv", scores, vb)
+        y_state = jnp.einsum("bhik,bhkv->bhiv", rb * jnp.exp(cum_prev), S)
+        # bonus is diagonal: y_i += (r_i ⊙ u · k_i) v_i
+        bon = jnp.sum(rb * u[None, :, None, :] * kb, axis=-1, keepdims=True) * vb
+        y = y_intra + y_state + bon
+
+        decay_total = jnp.exp(total[..., 0, :])  # (B,H,K)
+        S_new = decay_total[..., :, None] * S + jnp.einsum(
+            "bhjk,bhjv->bhkv", k_rem, vb
+        )
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dk)
+    return y, S_final
+
+
+def rwkv6_channel_mix_init(keygen: KeyGen, cfg: Rwkv6Cfg, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": Param(jnp.full((d,), 0.5, dtype), ("embed",)),
+        "mu_r": Param(jnp.full((d,), 0.5, dtype), ("embed",)),
+        "k": dense_init(keygen, d, (f,), in_axis="embed", out_axes=("mlp",), dtype=dtype),
+        "v": dense_init(keygen, f, (d,), in_axis="mlp", out_axes=("embed",), dtype=dtype),
+        "r": dense_init(keygen, d, (d,), in_axis="embed", out_axes=(None,), dtype=dtype),
+    }
+
+
+def rwkv6_channel_mix_apply(p, x, cfg: Rwkv6Cfg, *, x_prev=None, compute_dtype=jnp.bfloat16):
+    xs = _token_shift(x, x_prev)
+    dx = xs - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense_apply(p["k"], xk, compute_dtype=compute_dtype)))
+    k = constrain(k, "batch", "act_seq", "act_mlp")
+    kv = dense_apply(p["v"], k, compute_dtype=compute_dtype)
+    return jax.nn.sigmoid(dense_apply(p["r"], xr, compute_dtype=compute_dtype)) * kv
+
+
+# ===========================================================================
+# Mamba (selective SSM) — Jamba's recurrent block (arXiv:2403.19887)
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class MambaCfg:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None
+    chunk: int = 64
+    scan_impl: str = "goom"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank if self.dt_rank is not None else -(-self.d_model // 16)
+
+
+def mamba_init(keygen: KeyGen, cfg: MambaCfg, dtype=jnp.float32):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    # S4D-real init for A: A[c, s] = -(s+1)
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))
+    return {
+        "in_proj": dense_init(keygen, d, (2 * di,), in_axis="embed",
+                              out_axes=("mlp",), dtype=dtype),
+        "conv_w": Param(normal(0.02)(keygen(), (cfg.d_conv, di), dtype), ("conv", "mlp")),
+        "conv_b": Param(jnp.zeros((di,), dtype), ("mlp",)),
+        "x_proj": dense_init(keygen, di, (r + 2 * n,), in_axis="mlp",
+                             out_axes=(None,), dtype=dtype),
+        "dt_proj": {
+            "w": Param(scaled_normal(axis=0)(keygen(), (r, di), dtype), (None, "mlp")),
+            "b": Param(
+                jnp.log(jnp.expm1(
+                    jnp.exp(jax.random.uniform(keygen(), (di,), jnp.float32,
+                                               jnp.log(1e-3), jnp.log(1e-1)))
+                )).astype(dtype),
+                ("mlp",),
+            ),
+        },
+        "a_log": Param(jnp.log(a_init).astype(dtype), ("mlp", "state")),
+        "d_skip": Param(jnp.ones((di,), dtype), ("mlp",)),
+        "out_proj": dense_init(keygen, di, (d,), in_axis="mlp",
+                               out_axes=("embed",), dtype=dtype),
+    }
+
+
+def mamba_apply(
+    p,
+    x: jax.Array,  # (B, S, d)
+    cfg: MambaCfg,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,
+    compute_dtype=jnp.bfloat16,
+):
+    b, s, d = x.shape
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.rank
+    cd = compute_dtype
+
+    xz = dense_apply(p["in_proj"], x, compute_dtype=cd)
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,S,di) each
+    xi = constrain(xi, "batch", "act_seq", "act_mlp")
+
+    # depthwise causal conv over time (kernel d_conv)
+    conv_in = xi
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"].astype(cd), xi], axis=1)
+        pad = 0
+    else:
+        pad = cfg.d_conv - 1
+    ci = jnp.pad(conv_in, ((0, 0), (pad, 0), (0, 0)))
+    w = p["conv_w"].astype(cd)  # (K, di)
+    xconv = sum(
+        ci[:, i : i + s, :] * w[i] for i in range(cfg.d_conv)
+    ) + p["conv_b"].astype(cd)
+    xc = jax.nn.silu(xconv)
+
+    # input-dependent Δ, B, C
+    dbc = dense_apply(p["x_proj"], xc, compute_dtype=cd).astype(jnp.float32)
+    dt_low, b_in, c_in = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_low @ p["dt_proj"]["w"].astype(jnp.float32)
+        + p["dt_proj"]["b"].astype(jnp.float32)
+    )  # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n), negative
+
+    h0 = (
+        jnp.zeros((b, di, n), jnp.float32)
+        if state is None
+        else state["ssm"]
+    )
+
+    # chunked scan over time.  Both the (B,S,di,n) decay/input tensors and
+    # the state tensor are only ever materialized per chunk: the scan
+    # carries (dt, x, B, C) slices — (B,L,di)/(B,L,n) — and expands to
+    # (B,L,di,n) transiently inside the chunk body.
+    L = min(cfg.chunk, s)
+    assert s % L == 0
+    nc = s // L
+    dtx = (dt * xc.astype(jnp.float32))  # (B,S,di)
+    dt_c = dt.reshape(b, nc, L, di).swapaxes(0, 1)
+    dtx_c = dtx.reshape(b, nc, L, di).swapaxes(0, 1)
+    bin_c = b_in.reshape(b, nc, L, n).swapaxes(0, 1)
+    c_c = c_in.reshape(b, nc, L, n).swapaxes(0, 1)
+
+    # nested remat: without it, the chunk scan saves every chunk's
+    # associative-scan tree intermediates ((L, B, di, n) × log L levels ×
+    # n_chunks) for the backward — tens of GiB at 4k×8k×16
+    @jax.checkpoint
+    def chunk_step(h, inp):
+        dtk, dtxk, bk, cc = inp  # (B,L,di), (B,L,di), (B,L,n), (B,L,n)
+        # log-decay is Δ·A — *already in log space*, the GOOM-native quantity
+        la = dtk[..., None] * a[None, None]               # (B,L,di,n)
+        bb = dtxk[..., None] * bk[..., None, :]           # (B,L,di,n)
+        states, h_new = segment_states(
+            la.swapaxes(0, 1), bb.swapaxes(0, 1), h, impl=cfg.scan_impl
+        )  # states (L,B,di,n)
+        y_chunk = jnp.einsum("lbdn,bln->bld", states, cc)
+        return h_new, y_chunk
+
+    h_final, y_c = jax.lax.scan(chunk_step, h0, (dt_c, dtx_c, bin_c, c_c))
+    y = y_c.swapaxes(0, 1).reshape(b, s, di)
+
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y, compute_dtype=cd)
+
+    new_state = None
+    if state is not None:
+        keep = cfg.d_conv - 1
+        new_state = {
+            "conv": conv_in[:, -keep:, :].astype(state["conv"].dtype),
+            "ssm": h_final,
+        }
+    return out, new_state
+
+
+def mamba_init_state(batch: int, cfg: MambaCfg, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def rwkv6_init_state(batch: int, cfg: Rwkv6Cfg, dtype=jnp.float32):
+    return {
+        "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+    }

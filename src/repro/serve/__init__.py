@@ -1,0 +1,5 @@
+"""Serving: prefill/decode step factories and the batched request driver."""
+
+from .steps import make_prefill_step, make_decode_step, abstract_caches
+
+__all__ = ["make_prefill_step", "make_decode_step", "abstract_caches"]

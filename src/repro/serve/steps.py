@@ -1,0 +1,60 @@
+"""Serve steps: prefill (prompt → caches) and decode (one token per call).
+
+``serve_step`` for the decode_* / long_* dry-run shapes is the decode step:
+one new token against a KV/SSM cache of ``seq_len`` — the caches are inputs
+and outputs of the jitted function (donated in production)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import DecoderLM
+
+
+def abstract_caches(model: DecoderLM, batch: int, max_len: int):
+    """ShapeDtypeStruct tree of the decode caches (no allocation)."""
+    return jax.eval_shape(lambda: model.init_caches(batch, max_len))
+
+
+def make_prefill_step(model: DecoderLM) -> Callable:
+    def prefill_step(params, tokens, caches, **kw):
+        return model.prefill(params, tokens, caches, **kw)
+
+    return prefill_step
+
+
+def make_decode_step(model: DecoderLM, *, sample: str = "greedy") -> Callable:
+    """decode_step(params, token (B,1), caches, index) -> (next (B,1), caches)
+
+    ``index`` is the absolute position of the incoming token (scalar)."""
+
+    def decode_step(params, token, caches, index):
+        logits, caches = model.decode_step(params, token, caches, index)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return decode_step
+
+
+def generate(
+    model: DecoderLM,
+    params,
+    prompt: jax.Array,  # (B, P)
+    n_tokens: int,
+    max_len: int,
+    **kw,
+) -> jax.Array:
+    """Greedy generation driver (jit-per-step; for tests/examples)."""
+    b, p = prompt.shape
+    caches = model.init_caches(b, max_len)
+    logits, caches = model.prefill(params, prompt, caches, **kw)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    step = jax.jit(make_decode_step(model))
+    for i in range(n_tokens - 1):
+        tok, caches = step(params, tok, caches, p + i)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

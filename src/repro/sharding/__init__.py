@@ -1,0 +1,23 @@
+"""Sharding: logical-axis rules mapped onto the production mesh."""
+
+from .rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    constrain,
+    logical_to_spec,
+    param_shardings,
+    use_rules,
+    current_rules,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "constrain",
+    "logical_to_spec",
+    "param_shardings",
+    "use_rules",
+    "current_rules",
+]

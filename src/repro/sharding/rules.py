@@ -1,0 +1,202 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter and activation in the model is annotated with *logical* axis
+names ("embed", "mlp", "heads", "batch", ...).  An ``AxisRules`` table maps
+each logical name to zero or more *mesh* axes.  The mapping is applied
+per-array with a divisibility check: a mesh axis that does not evenly divide
+the dimension is dropped (GSPMD could pad, but uneven shards waste memory and
+make the roofline terms lie — we prefer explicit replication).
+
+Mesh axes (fixed by the launch spec):
+  * single-pod:  ("data", "model")            = (16, 16)
+  * multi-pod:   ("pod", "data", "model")     = (2, 16, 16)
+
+Parallelism mapping:
+  * DP   — "batch" over ("pod", "data")   (gradient all-reduce over both)
+  * FSDP — "embed" / "mlp_in" weight axes over "data" (ZeRO-3 style gather)
+  * TP   — "mlp", "heads", "vocab" over "model"
+  * EP   — "expert" over "data" when divisible (all-to-all dispatch)
+  * SP   — "act_seq" over "model" for long-context activations (opt-in)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class AxisRules:
+    """A mapping logical-axis-name -> mesh axes, bound to a mesh."""
+
+    def __init__(self, mesh: Mesh, table: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.table = dict(table)
+
+    def mesh_axes_for(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        v = self.table.get(name, None)
+        if v is None:
+            return ()
+        if isinstance(v, str):
+            return (v,)
+        return tuple(v)
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(
+        self,
+        shape: Sequence[int],
+        names: Sequence[Optional[str]],
+        *,
+        allow_uneven: bool = False,
+    ) -> P:
+        """PartitionSpec for ``shape`` given logical ``names`` per dim.
+
+        Never maps one mesh axis to two dims (first dim wins).  Mesh axes
+        that don't divide the dim are dropped (explicit replication) —
+        except with ``allow_uneven`` (activation constraints only: pjit
+        rejects uneven *argument* shardings), where GSPMD's padded uneven
+        sharding is kept when it wastes < 25% (e.g. 28 heads over 16
+        shards pads to 32, 14% waste — far cheaper than 16-way replicated
+        attention compute).
+        """
+        assert len(shape) == len(names), (shape, names)
+        used: set = set()
+        entries = []
+        for dim, name in zip(shape, names):
+            axes = [a for a in self.mesh_axes_for(name) if a not in used]
+            # greedily keep the prefix of mesh axes within the waste budget
+            kept = []
+            prod = 1
+            for a in axes:
+                n = prod * self.mesh.shape[a]
+                if dim % n == 0:
+                    kept.append(a)
+                    prod = n
+                elif allow_uneven and dim >= n:
+                    padded = -(-dim // n) * n
+                    if (padded - dim) / dim < 0.25:
+                        kept.append(a)
+                        prod = n
+            used.update(kept)
+            if not kept:
+                entries.append(None)
+            elif len(kept) == 1:
+                entries.append(kept[0])
+            else:
+                entries.append(tuple(kept))
+        # strip trailing Nones (cosmetic)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, shape: Sequence[int], names: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, names))
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+def _base_table(batch_axes: Tuple[str, ...]) -> Dict[str, MeshAxes]:
+    return {
+        # -- activations ----------------------------------------------------
+        "batch": batch_axes,          # DP
+        "act_seq": None,              # SP opt-in: set to "model" for long ctx
+        "act_embed": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_expert": "data",         # EP: dispatched tokens live on data axis
+        "cache_seq": None,            # decode KV cache seq (context parallel
+                                      # opt-in: "data" for long_500k)
+        # -- parameters -----------------------------------------------------
+        "embed": "data",              # FSDP shard of the d_model dim
+        "vocab": "model",             # TP shard of embedding / lm head
+        "mlp": "model",               # TP shard of ffn hidden
+        "heads": "model",             # TP shard of attention heads
+        "kv_heads": "model",          # (dropped automatically if indivisible)
+        "head_dim": None,
+        "qkv_embed": "data",          # FSDP on the input dim of qkv proj
+        "expert": "data",             # EP shard of expert count
+        "expert_mlp": "model",        # TP inside each expert
+        "state": None,                # SSM state dims stay local
+        "conv": None,
+        "layers": None,               # stacked-scan layer dim: never sharded
+        "periods": None,
+        "norm": None,
+    }
+
+
+def DEFAULT_RULES(mesh: Mesh) -> AxisRules:
+    """Single-pod rules: batch over ("data",)."""
+    return AxisRules(mesh, _base_table(("data",)))
+
+
+def MULTIPOD_RULES(mesh: Mesh) -> AxisRules:
+    """Multi-pod rules: batch over ("pod", "data")."""
+    return AxisRules(mesh, _base_table(("pod", "data")))
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, MeshAxes]] = None) -> AxisRules:
+    table = _base_table(("pod", "data") if "pod" in mesh.shape else ("data",))
+    if overrides:
+        table.update(overrides)
+    return AxisRules(mesh, table)
+
+
+# ---------------------------------------------------------------------------
+# thread-local active rules + activation constraints
+# ---------------------------------------------------------------------------
+_ACTIVE = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _ACTIVE.rules = rules
+    try:
+        yield rules
+    finally:
+        _ACTIVE.rules = prev
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without active rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(x.shape, list(names), allow_uneven=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def logical_to_spec(rules: AxisRules, shape, names) -> P:
+    return rules.spec(shape, names)
+
+
+def param_shardings(rules: AxisRules, shapes_tree, axes_tree):
+    """Map a tree of ShapeDtypeStructs + logical-axes tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda sds, names: rules.sharding(sds.shape, list(names)),
+        shapes_tree,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, (tuple, list)) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )

@@ -1,0 +1,9 @@
+"""Training substrate: optimizers, data pipeline, checkpointing, train step."""
+
+from .optimizer import AdamW, Lion, cosine_schedule, clip_by_global_norm
+from .train_loop import make_train_step, TrainState
+
+__all__ = [
+    "AdamW", "Lion", "cosine_schedule", "clip_by_global_norm",
+    "make_train_step", "TrainState",
+]

@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step on CPU, asserting output shapes + no NaNs (assignment req)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.models.common import unzip
+from repro.models.model import DecoderLM
+
+ALL = ASSIGNED_ARCHS + ["goom-rnn-124m"]
+
+
+def _inputs(cfg, b, s, key):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    labels = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    kw = {}
+    if cfg.frontend:
+        kw["prefix_embeds"] = 0.01 * jnp.ones((b, cfg.n_prefix, cfg.d_model))
+    if cfg.mrope:
+        kw["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s))
+    return toks, labels, kw
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    model = DecoderLM(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    b, s = 2, 32
+    toks, labels, kw = _inputs(cfg, b, s, jax.random.PRNGKey(1))
+    logits, _, _ = model.apply(params, toks, **kw)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_one_train_step(arch):
+    from repro.train.optimizer import AdamW, cosine_schedule
+    from repro.train.train_loop import init_train_state, make_train_step
+
+    cfg = get_config(arch, smoke=True)
+    model = DecoderLM(cfg)
+    opt = AdamW(cosine_schedule(1e-3, 2, 10))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    b, s = 2, 32
+    toks, labels, kw = _inputs(cfg, b, s, jax.random.PRNGKey(1))
+    step = make_train_step(model, opt)
+    batch = dict(tokens=toks, labels=labels, **kw)
+    new_state, metrics = step(state, batch)
+    assert int(new_state.step) == 1
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a - b_))),
+        state.params, new_state.params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_param_counts_match_published_sizes():
+    """Full configs must land near the published parameter counts."""
+    from repro.launch.roofline import count_params
+
+    expected = {
+        "qwen2-vl-7b": (7.6e9, 0.15),       # 7.6B text backbone
+        "rwkv6-7b": (7.6e9, 0.25),
+        "mixtral-8x7b": (46.7e9, 0.10),
+        "phi3.5-moe": (41.9e9, 0.10),
+        "olmo-1b": (1.2e9, 0.15),
+        "codeqwen1.5-7b": (7.2e9, 0.15),
+        "glm4-9b": (9.4e9, 0.15),
+        "gemma3-1b": (1.0e9, 0.25),
+        "jamba-v0.1": (51.6e9, 0.15),
+        "musicgen-large": (3.3e9, 0.35),    # backbone of the 3.3B model
+    }
+    for arch, (want, tol) in expected.items():
+        n = count_params(get_config(arch))
+        assert abs(n - want) / want < tol, f"{arch}: {n/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+def test_moe_active_params_far_below_total():
+    from repro.launch.roofline import count_params
+
+    cfg = get_config("phi3.5-moe")
+    total = count_params(cfg)
+    active = count_params(cfg, active_only=True)
+    assert active < 0.3 * total  # 6.6B active of 42B

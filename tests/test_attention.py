@@ -1,0 +1,165 @@
+"""Flash attention vs naive reference; decode/prefill cache consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    AttentionCfg,
+    attention_apply,
+    attention_init,
+    flash_attention,
+    init_cache,
+)
+from repro.models.common import KeyGen, unzip
+
+
+def ref_attn(q, k, v, window, scale):
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k) * scale
+    pos = jnp.arange(s)
+    m = pos[None, :] <= pos[:, None]
+    if window:
+        m &= pos[None, :] > pos[:, None] - window
+    sc = jnp.where(m[None, :, None, None, :], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v).reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("s,h,kvh,d,window,bq,bk", [
+    (64, 4, 2, 16, None, 16, 16),
+    (64, 4, 1, 16, 24, 16, 16),
+    (128, 2, 2, 8, None, 32, 64),
+    (96, 4, 4, 8, 17, 32, 16),
+    (64, 8, 2, 4, 1, 16, 16),       # window=1: attend only to self
+])
+def test_flash_matches_reference(s, h, kvh, d, window, bq, bk):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d))
+    k = jax.random.normal(ks[1], (2, s, kvh, d))
+    v = jax.random.normal(ks[2], (2, s, kvh, d))
+    pos = jnp.arange(s)
+    got = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          window=window, scale=d ** -0.5,
+                          block_q=bq, block_kv=bk)
+    want = ref_attn(q, k, v, window, d ** -0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gradients_match_reference():
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    s, h, kvh, d = 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (2, s, h, d))
+    k = jax.random.normal(ks[1], (2, s, kvh, d))
+    v = jax.random.normal(ks[2], (2, s, kvh, d))
+    pos = jnp.arange(s)
+
+    def loss_flash(q, k, v):
+        o = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                            window=20, scale=d ** -0.5, block_q=16, block_kv=16)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref_attn(q, k, v, 20, d ** -0.5)))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_decode_matches_full_forward(window):
+    """Prefill + token-by-token decode == full self-attention forward."""
+    cfg = AttentionCfg(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       window=window)
+    params, _ = unzip(attention_init(KeyGen(jax.random.PRNGKey(3)), cfg))
+    b, s = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, s, 32))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    full, _ = attention_apply(params, x, cfg, positions=positions,
+                              compute_dtype=jnp.float32)
+
+    # prefill 16 then decode 8
+    p = 16
+    cache = dict(init_cache(b, cfg, max_len=s, dtype=jnp.float32),
+                 index=jnp.zeros((), jnp.int32))
+    out_p, cache = attention_apply(params, x[:, :p], cfg,
+                                   positions=positions[:, :p], cache=cache,
+                                   compute_dtype=jnp.float32)
+    np.testing.assert_allclose(out_p, full[:, :p], rtol=1e-4, atol=1e-4)
+    for t in range(p, s):
+        out_t, cache = attention_apply(params, x[:, t:t + 1], cfg,
+                                       positions=positions[:, t:t + 1],
+                                       cache=cache,
+                                       compute_dtype=jnp.float32)
+        np.testing.assert_allclose(out_t[:, 0], full[:, t], rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_rolling_buffer_cache_is_window_sized():
+    cfg = AttentionCfg(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8,
+                       window=8)
+    c = init_cache(4, cfg, max_len=1024)
+    assert c["k"].shape[1] == 8  # window, not max_len
+
+
+@pytest.mark.parametrize("s,w", [(64, 8), (96, 16), (64, 16), (80, 8)])
+def test_banded_equals_flash_for_windows(s, w):
+    """The 2-block banded form is exact for sliding windows (perf path)."""
+    from repro.models.attention import banded_attention
+
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    h, kvh, d = 4, 2, 8
+    q = jax.random.normal(ks[0], (2, s, h, d))
+    k = jax.random.normal(ks[1], (2, s, kvh, d))
+    v = jax.random.normal(ks[2], (2, s, kvh, d))
+    pos = jnp.arange(s)
+    got = banded_attention(q, k, v, positions=pos, window=w, scale=d ** -0.5)
+    want = ref_attn(q, k, v, w, d ** -0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_banded_gradients_match():
+    from repro.models.attention import banded_attention
+
+    key = jax.random.PRNGKey(8)
+    ks = jax.random.split(key, 3)
+    s, w, h, kvh, d = 48, 8, 2, 2, 8
+    q = jax.random.normal(ks[0], (1, s, h, d))
+    k = jax.random.normal(ks[1], (1, s, kvh, d))
+    v = jax.random.normal(ks[2], (1, s, kvh, d))
+    pos = jnp.arange(s)
+    gb = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(
+        banded_attention(q, k, v, positions=pos, window=w, scale=d ** -0.5))),
+        argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda q, k, v: jnp.sum(jnp.sin(
+        ref_attn(q, k, v, w, d ** -0.5))), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_mrope_positions_change_output():
+    cfg = AttentionCfg(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                       mrope_sections=(2, 1, 1))
+    params, _ = unzip(attention_init(KeyGen(jax.random.PRNGKey(5)), cfg))
+    b, s = 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, s, 32))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    text = jnp.broadcast_to(positions[None], (3, b, s))
+    # h/w streams advancing at different *rates* (a constant offset would be
+    # a global phase with no effect on relative attention angles)
+    img = text.at[1].mul(3).at[2].set(0)
+    o1, _ = attention_apply(params, x, cfg, positions=positions,
+                            mrope_positions=text, compute_dtype=jnp.float32)
+    o2, _ = attention_apply(params, x, cfg, positions=positions,
+                            mrope_positions=img, compute_dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(o1 - o2))) > 1e-4

@@ -1,0 +1,215 @@
+"""Unit tests for the GOOM representation and elementwise/LSE/LMME ops."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Goom,
+    finite_floor,
+    from_goom,
+    goom_add,
+    goom_dot,
+    goom_from_complex,
+    goom_lse,
+    goom_mul,
+    goom_neg,
+    goom_norm,
+    goom_to_complex,
+    lmme_naive,
+    lmme_reference,
+    safe_abs,
+    safe_log,
+    to_goom,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# representation round-trips
+# ---------------------------------------------------------------------------
+def test_roundtrip_basic():
+    x = jnp.array([1.5, -2.25, 0.0, 1e30, -1e-30, 3.0])
+    y = from_goom(to_goom(x))
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+def test_zero_is_positive_goom():
+    g = to_goom(jnp.array([0.0]))
+    assert float(g.sign[0]) == 1.0
+    assert np.isneginf(float(g.log_abs[0]))  # exact sentinel (option a)
+    assert float(from_goom(g)[0]) == 0.0
+    gf = to_goom(jnp.array([0.0]), use_floor=True)  # finite floor (option b)
+    assert float(gf.log_abs[0]) == pytest.approx(finite_floor(jnp.float32))
+    assert float(from_goom(gf)[0]) == 0.0
+
+
+def test_complex_interop_matches_paper_formulation():
+    x = jnp.array([2.0, -3.0, 0.5, -0.125])
+    g = to_goom(x)
+    z = goom_to_complex(g)
+    # paper: exp(x') must equal x (real part after complex exp)
+    np.testing.assert_allclose(np.real(np.exp(np.asarray(z))), x, rtol=1e-6)
+    g2 = goom_from_complex(z)
+    np.testing.assert_allclose(g2.log_abs, g.log_abs, rtol=1e-6)
+    np.testing.assert_allclose(g2.sign, g.sign)
+
+
+def test_multiple_branches_same_real():
+    # 3 + 2*pi*i and 3 + 4*pi*i are the same GOOM (paper §2 example)
+    z1 = jnp.complex64(3 + 2j * np.pi)
+    z2 = jnp.complex64(3 + 4j * np.pi)
+    g1, g2 = goom_from_complex(z1), goom_from_complex(z2)
+    assert float(g1.sign) == float(g2.sign) == 1.0
+    np.testing.assert_allclose(g1.log_abs, g2.log_abs)
+
+
+def test_dynamic_range_beyond_floats():
+    """Table 1: GOOMs with f32 components represent exp(±1e38)-scale values."""
+    g = Goom(jnp.array([1e37, -1e37]), jnp.array([1.0, -1.0]))
+    assert np.all(np.isfinite(g.log_abs))
+    # products compound in log space without overflow
+    p = goom_mul(g, g)
+    assert np.all(np.isfinite(p.log_abs))
+    np.testing.assert_allclose(p.log_abs, [2e37, -2e37])
+    np.testing.assert_allclose(p.sign, [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# redefined derivatives (paper eqs. 5, 6, 8)
+# ---------------------------------------------------------------------------
+def test_safe_abs_grad_nonzero_at_zero():
+    g = jax.grad(lambda x: safe_abs(x))(0.0)
+    assert float(g) == 1.0  # eq. 5: sign(0) := +1
+
+
+def test_safe_log_grad_finite_at_zero():
+    g = jax.grad(lambda x: safe_log(x))(0.0)
+    assert np.isfinite(float(g)) and float(g) > 0
+
+
+def test_from_goom_grad_nonzero_for_zero_value():
+    # exp'(floor) would be ~0; eq. 8 shifts it away from zero.
+    g = to_goom(jnp.array(0.0))
+    grad = jax.grad(lambda la: from_goom(Goom(la, g.sign)))(g.log_abs)
+    assert float(grad) != 0.0
+
+
+def test_roundtrip_gradient_matches_identity():
+    # d/dx exp(log(x)) == 1 for normal-range x
+    for v in [0.5, 2.0, -3.0]:
+        grad = jax.grad(lambda x: from_goom(to_goom(x)))(v)
+        assert float(grad) == pytest.approx(1.0, rel=1e-4), v
+
+
+# ---------------------------------------------------------------------------
+# ring ops
+# ---------------------------------------------------------------------------
+@given(
+    st.lists(st.floats(-50, 50).filter(lambda v: abs(v) > 1e-3), min_size=1, max_size=8),
+    st.lists(st.floats(-50, 50).filter(lambda v: abs(v) > 1e-3), min_size=1, max_size=8),
+)
+@settings(max_examples=25, deadline=None)
+def test_mul_add_match_reals(xs, ys):
+    n = min(len(xs), len(ys))
+    x = jnp.array(xs[:n], jnp.float32)
+    y = jnp.array(ys[:n], jnp.float32)
+    np.testing.assert_allclose(
+        from_goom(goom_mul(to_goom(x), to_goom(y))), x * y, rtol=2e-5
+    )
+    np.testing.assert_allclose(
+        from_goom(goom_add(to_goom(x), to_goom(y))), x + y, rtol=2e-4, atol=1e-4
+    )
+
+
+def test_add_cancellation_yields_zero():
+    x = jnp.array([3.0, -7.5])
+    s = goom_add(to_goom(x), goom_neg(to_goom(x)))
+    np.testing.assert_allclose(from_goom(s), [0.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(s.sign, [1.0, 1.0])  # zero is non-negative
+
+
+def test_lse_huge_magnitudes():
+    """Example 2: dot of vectors with elements exp(1000) stays stable."""
+    a = Goom(jnp.full((4,), 1000.0), jnp.ones((4,)))
+    out = goom_lse(goom_mul(a, a), axis=0)
+    assert float(out.log_abs) == pytest.approx(2000.0 + np.log(4.0), rel=1e-6)
+
+
+def test_dot_matches_reals():
+    a = jax.random.normal(KEY, (16,))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    got = from_goom(goom_dot(to_goom(a), to_goom(b)))
+    np.testing.assert_allclose(got, jnp.dot(a, b), rtol=1e-4, atol=1e-5)
+
+
+def test_norm_matches_reals():
+    a = jax.random.normal(KEY, (8, 5))
+    got = goom_norm(to_goom(a), axis=-1)
+    np.testing.assert_allclose(got, jnp.log(jnp.linalg.norm(a, axis=-1)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LMME (eq. 9–12)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 4, 4), (3, 5, 7), (1, 8, 2), (16, 16, 16)])
+def test_lmme_matches_real_matmul(shape):
+    n, d, m = shape
+    a = jax.random.normal(KEY, (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(2), (d, m))
+    want = a @ b
+    for fn in (lmme_naive, lmme_reference):
+        got = from_goom(fn(to_goom(a), to_goom(b)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lmme_batched():
+    a = jax.random.normal(KEY, (3, 4, 5))
+    b = jax.random.normal(jax.random.PRNGKey(3), (3, 5, 6))
+    want = jnp.einsum("bij,bjk->bik", a, b)
+    got = from_goom(lmme_reference(to_goom(a), to_goom(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    got_n = from_goom(lmme_naive(to_goom(a), to_goom(b)))
+    np.testing.assert_allclose(got_n, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lmme_extreme_magnitudes():
+    """Magnitudes way beyond float range: compare against shifted oracle."""
+    shift = 500.0  # exp(500) overflows f32 by ~180 orders of magnitude
+    a = jax.random.normal(KEY, (6, 6))
+    b = jax.random.normal(jax.random.PRNGKey(4), (6, 6))
+    ga = Goom(to_goom(a).log_abs + shift, to_goom(a).sign)
+    gb = Goom(to_goom(b).log_abs + shift, to_goom(b).sign)
+    got = lmme_reference(ga, gb)
+    want = lmme_reference(to_goom(a), to_goom(b))
+    np.testing.assert_allclose(got.log_abs, want.log_abs + 2 * shift, rtol=1e-4)
+    np.testing.assert_allclose(got.sign, want.sign)
+
+
+def test_lmme_naive_equals_reference_property():
+    for seed in range(5):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(k1, (7, 9)) * jnp.exp(jax.random.normal(k1, (7, 9)) * 3)
+        b = jax.random.normal(k2, (9, 4)) * jnp.exp(jax.random.normal(k2, (9, 4)) * 3)
+        ref = lmme_naive(to_goom(a), to_goom(b))
+        got = lmme_reference(to_goom(a), to_goom(b))
+        np.testing.assert_allclose(got.log_abs, ref.log_abs, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(got.sign, ref.sign)
+
+
+def test_lmme_gradients_flow():
+    a = jax.random.normal(KEY, (4, 4))
+    b = jax.random.normal(jax.random.PRNGKey(5), (4, 4))
+
+    def loss(a):
+        out = lmme_reference(to_goom(a), to_goom(b))
+        return jnp.sum(from_goom(out))
+
+    g = jax.grad(loss)(a)
+    assert np.all(np.isfinite(g))
+    # compare against plain matmul gradient
+    g_ref = jax.grad(lambda a: jnp.sum(a @ b))(a)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,185 @@
+"""Tests for GOOM prefix scans and the selective-resetting method (§5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Goom,
+    cumulative_lmme,
+    diagonal_scan,
+    from_goom,
+    goom_zeros,
+    matrix_scan,
+    selective_reset_scan,
+    to_goom,
+)
+from repro.core.scan import colinearity_select, orthonormal_reset
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# diagonal scan
+# ---------------------------------------------------------------------------
+def _ref_diag(a, b, x0):
+    xs = []
+    x = x0
+    for t in range(a.shape[0]):
+        x = a[t] * x + b[t]
+        xs.append(x)
+    return jnp.stack(xs)
+
+
+def test_diagonal_scan_matches_sequential():
+    t, d = 32, 5
+    a = jax.random.normal(KEY, (t, d))
+    b = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    got = from_goom(diagonal_scan(to_goom(a), to_goom(b), to_goom(x0)))
+    want = _ref_diag(a, b, x0)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_diagonal_scan_no_x0():
+    t, d = 16, 3
+    a = jax.random.uniform(KEY, (t, d), minval=0.1, maxval=0.9)
+    b = jax.random.normal(jax.random.PRNGKey(1), (t, d))
+    got = from_goom(diagonal_scan(to_goom(a), to_goom(b)))
+    want = _ref_diag(a, b, jnp.zeros(d))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_diagonal_scan_extreme_decay_products():
+    """Decay products underflow floats after ~100 steps; GOOMs don't care."""
+    t, d = 4096, 2
+    a = jnp.full((t, d), 0.1)  # 0.1^4096 == exp(-9431): deeply sub-float
+    b = jnp.zeros((t, d)).at[0].set(1.0)
+    out = diagonal_scan(to_goom(a), to_goom(b))
+    # final state log-magnitude = (t-1) * log(0.1)
+    np.testing.assert_allclose(
+        out.log_abs[-1], (t - 1) * np.log(0.1), rtol=1e-5
+    )
+    assert np.all(np.isfinite(out.log_abs))
+
+
+# ---------------------------------------------------------------------------
+# matrix scan / cumulative LMME
+# ---------------------------------------------------------------------------
+def test_matrix_scan_matches_sequential():
+    t, d = 12, 4
+    a = jax.random.normal(KEY, (t, d, d)) * 0.5
+    b = jax.random.normal(jax.random.PRNGKey(1), (t, d, 1)) * 0.5
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (d, 1))
+    got = from_goom(matrix_scan(to_goom(a), to_goom(b), to_goom(x0)))
+    x, want = x0, []
+    for i in range(t):
+        x = a[i] @ x + b[i]
+        want.append(x)
+    np.testing.assert_allclose(got, jnp.stack(want), rtol=5e-3, atol=5e-3)
+
+
+def test_cumulative_lmme_matches_cumprod():
+    t, d = 10, 3
+    mats = jax.random.normal(KEY, (t, d, d))
+    got = from_goom(cumulative_lmme(to_goom(mats)))
+    p, want = jnp.eye(d), []
+    for i in range(t):
+        p = mats[i] @ p
+        want.append(p)
+    np.testing.assert_allclose(got, jnp.stack(want), rtol=5e-3, atol=5e-3)
+
+
+def test_cumulative_lmme_survives_growth_beyond_floats():
+    """Products of N(0,1) matrices grow ~sqrt(d)^t: fails floats, fine in GOOMs."""
+    t, d = 512, 8
+    mats = jax.random.normal(KEY, (t, d, d))
+    out = cumulative_lmme(to_goom(mats))
+    assert np.all(np.isfinite(out.log_abs))
+    assert float(jnp.max(out.log_abs[-1])) > 100.0  # far beyond f32's ~88
+
+
+# ---------------------------------------------------------------------------
+# selective resetting (§5, App. C)
+# ---------------------------------------------------------------------------
+def _sequential_with_resets(mats, select, reset):
+    """Literal sequential execution of the reset semantics: state resets
+    whenever the running state triggers the selector."""
+    x = mats[0]
+    states, flags = [x], [bool(select(to_goom(x)))]
+    for t in range(1, mats.shape[0]):
+        prev = to_goom(x)
+        if bool(select(prev)):
+            x = from_goom(reset(prev))
+        x = mats[t] @ x
+        states.append(x)
+    return jnp.stack(states)
+
+
+def test_no_resets_matches_plain_scan():
+    t, d = 8, 3
+    mats = jax.random.normal(KEY, (t, d, d))
+    never = lambda g: jnp.zeros(g.shape[:-2], bool)
+    states, flags = selective_reset_scan(to_goom(mats), never, orthonormal_reset())
+    want = cumulative_lmme(to_goom(mats))
+    np.testing.assert_allclose(states.log_abs, want.log_abs, rtol=1e-3, atol=1e-3)
+    assert not np.any(flags)
+
+
+def test_always_reset_is_associative_and_bounded():
+    """With aggressive resetting, states stay orthonormal-ish (log_abs ~ 0)."""
+    t, d = 64, 4
+    mats = jax.random.normal(KEY, (t, d, d))
+    always = lambda g: jnp.ones(g.shape[:-2], bool)
+    # paper-literal (ungated) semantics: every compound, incl. interior ones,
+    # is reset at every combine -> magnitudes stay modest.
+    states, flags = selective_reset_scan(
+        to_goom(mats), always, orthonormal_reset(),
+        reset_only_state_compounds=False,
+    )
+    assert np.all(np.isfinite(states.log_abs))
+    assert np.any(flags)
+    # Without resets the largest log-magnitude after 64 steps is ~64*0.5*log(4)≈44;
+    # with resets every combine, magnitudes stay modest.
+    assert float(jnp.max(states.log_abs[-1])) < 20.0
+    # gated (state-compounds-only) semantics: interior compounds still grow,
+    # but states remain finite and flags fire.
+    states_g, flags_g = selective_reset_scan(
+        to_goom(mats), always, orthonormal_reset()
+    )
+    assert np.all(np.isfinite(states_g.log_abs))
+    assert np.any(flags_g)
+
+
+def test_colinearity_select_triggers_on_rank_collapse():
+    sel = colinearity_select(0.99)
+    v = jnp.ones((4, 1)) @ jnp.array([[1.0, 1.001, 0.999, 1.0]])  # rank-1
+    assert bool(sel(to_goom(v)))
+    q, _ = jnp.linalg.qr(jax.random.normal(KEY, (4, 4)))
+    assert not bool(sel(to_goom(q)))  # orthonormal: no colinearity
+
+
+def test_orthonormal_reset_produces_orthonormal():
+    rst = orthonormal_reset()
+    a = jax.random.normal(KEY, (5, 5)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(1), (5, 5)) * 5
+    )
+    q = from_goom(rst(to_goom(a)))
+    np.testing.assert_allclose(q.T @ q, jnp.eye(5), atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_reset_scan_states_always_finite(seed):
+    """Property: whatever the matrices, reset-scan states stay finite."""
+    t, d = 32, 3
+    mats = jax.random.normal(jax.random.PRNGKey(seed), (t, d, d)) * 3.0
+    states, _ = selective_reset_scan(
+        to_goom(mats), colinearity_select(0.995), orthonormal_reset()
+    )
+    # no NaN / +inf blowups (-inf is a legitimate exact zero)
+    assert not np.any(np.isnan(states.log_abs))
+    assert not np.any(np.isposinf(states.log_abs))
+    assert np.all(np.abs(states.sign) == 1.0)

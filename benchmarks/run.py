@@ -12,15 +12,22 @@
   appD_time       — App. D: per-op wall-time of GOOM ops vs raw floats.
   roofline        — §Dry-run/§Roofline: prints the roofline table from
                     results/dryrun_baseline.json (run dryrun first).
+  scan_backends   — engine dispatch sweep: diagonal + matrix GOOM scans per
+                    backend (reference vs pallas), with parity checks.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [names...]
+Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
+
+``--backend {reference,pallas,auto}`` (repeatable) selects the scan-engine
+backend.  ``scan_backends`` sweeps every requested backend (default: both
+``reference`` and ``pallas``); all other benchmarks run under the first
+requested backend (default ``auto``).
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
-import sys
 import time
 
 import jax
@@ -225,6 +232,51 @@ def roofline():
     return {"n": len(rows)}
 
 
+def scan_backends(backends=("reference", "pallas")):
+    """Diagonal + matrix scans through the engine, per backend, with parity."""
+    import numpy as np
+    from repro.core import engine
+    from repro.core.goom import to_goom
+
+    print("# scan_backends: engine-dispatched GOOM scans")
+    print("op,backend,resolved,shape,ms")
+    out = {}
+    key = jax.random.PRNGKey(0)
+    baseline = {}
+    for backend in backends:
+        with engine.use_backend(backend):
+            resolved = engine.resolved_backend()
+            # interpret mode executes the kernel body per grid step in
+            # Python — a correctness path, so keep its shapes small.
+            small = resolved == "pallas_interpret"
+            t, c = (256, 64) if small else (4096, 512)
+            tm, d = (32, 8) if small else (512, 16)
+
+            da = to_goom(jnp.exp(-jnp.abs(jax.random.normal(key, (t, c)))))
+            db = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, c)))
+            ma = to_goom(jax.random.normal(key, (tm, d, d)) * 0.5)
+            mb = to_goom(jax.random.normal(jax.random.PRNGKey(2), (tm, d, 1)) * 0.5)
+
+            fd = jax.jit(engine.diagonal_scan)
+            fm = jax.jit(engine.matrix_scan)
+            ms_d = _bench(fd, da, db) * 1e3
+            ms_m = _bench(fm, ma, mb) * 1e3
+            out[backend] = {"resolved": resolved, "diag_ms": ms_d,
+                            "matrix_ms": ms_m}
+            print(f"diagonal_scan,{backend},{resolved},({t}x{c}),{ms_d:.2f}")
+            print(f"matrix_scan,{backend},{resolved},({tm}x{d}x{d}),{ms_m:.2f}")
+
+            # parity across backends on a shared small problem
+            pa = to_goom(jax.random.normal(key, (24, 4, 4)) * 0.5)
+            pb = to_goom(jax.random.normal(jax.random.PRNGKey(3), (24, 4, 1)))
+            got = engine.matrix_scan(pa, pb)
+            if "matrix" in baseline:
+                np.testing.assert_allclose(
+                    got.log_abs, baseline["matrix"], rtol=1e-4, atol=1e-3)
+            baseline["matrix"] = np.asarray(got.log_abs)
+    return out
+
+
 ALL = {
     "table1_range": table1_range,
     "fig1_chains": fig1_chains,
@@ -233,17 +285,33 @@ ALL = {
     "fig3_lyapunov": fig3_lyapunov,
     "fig4_rnn": fig4_rnn,
     "roofline": roofline,
+    "scan_backends": scan_backends,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    from repro.core import engine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*", metavar="name",
+                    help=f"benchmarks to run (default: all): {', '.join(ALL)}")
+    ap.add_argument("--backend", action="append",
+                    choices=["reference", "pallas", "auto"],
+                    help="scan-engine backend; repeat to sweep (scan_backends "
+                         "sweeps reference+pallas by default)")
+    args = ap.parse_args()
+    names = args.names or list(ALL)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     results = {}
     for name in names:
         print(f"\n=== {name} " + "=" * max(1, 60 - len(name)))
         t0 = time.time()
-        results[name] = ALL[name]()
+        if name == "scan_backends":
+            results[name] = scan_backends(
+                tuple(args.backend or ("reference", "pallas")))
+        else:
+            with engine.use_backend((args.backend or ["auto"])[0]):
+                results[name] = ALL[name]()
         print(f"=== {name} done in {time.time()-t0:.1f}s")
     with open(os.path.join(RESULTS_DIR, "bench_results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)

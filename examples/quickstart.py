@@ -8,9 +8,9 @@ import jax.numpy as jnp
 
 from repro.core import (
     Goom, from_goom, to_goom, goom_mul, goom_add, goom_dot,
-    lmme_reference, cumulative_lmme,
+    lmme_reference,
 )
-from repro.kernels.lmme import lmme_pallas
+from repro.core import engine
 
 print("=" * 64)
 print("1. A GOOM is a (log-magnitude, sign) pair — the split form of the")
@@ -36,7 +36,7 @@ print("   random N(0,1) matmuls overflows float32 in ~50 steps; over")
 print("   GOOMs it just runs.")
 key = jax.random.PRNGKey(0)
 mats = jax.random.normal(key, (1000, 16, 16))
-chain = cumulative_lmme(to_goom(mats))
+chain = engine.cumulative_lmme(to_goom(mats))  # auto-dispatched backend
 final = Goom(chain.log_abs[-1], chain.sign[-1])
 print("   final log-magnitudes: min %.1f  max %.1f  (finite: %s)" % (
     float(jnp.min(final.log_abs)), float(jnp.max(final.log_abs)),
@@ -44,10 +44,12 @@ print("   final log-magnitudes: min %.1f  max %.1f  (finite: %s)" % (
 
 print("=" * 64)
 print("4. The Pallas TPU kernel computes the same LMME with online per-tile")
-print("   rescaling (interpret mode on CPU).")
+print("   rescaling; the engine picks it automatically on TPU, and")
+print("   `use_backend('pallas')` forces it (interpret mode on CPU).")
 a = to_goom(jax.random.normal(jax.random.PRNGKey(1), (64, 64)))
 b = to_goom(jax.random.normal(jax.random.PRNGKey(2), (64, 64)))
-out_k = lmme_pallas(a, b, interpret=True)
+with engine.use_backend("pallas"):
+    out_k = engine.lmme(a, b)
 out_r = lmme_reference(a, b)
 print("   max |kernel - reference| log-mag error:",
       float(jnp.max(jnp.abs(out_k.log_abs - out_r.log_abs))))

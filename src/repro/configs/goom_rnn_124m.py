@@ -7,8 +7,10 @@ from ..models.goom_layer import GoomSSMCfg
 from ..models.model import LMConfig
 
 
-def _make(d, layers, vocab, name, head_dim=16, chunk=128, matmul="reference"):
-    goom = GoomSSMCfg(d_model=d, head_dim=head_dim, chunk=chunk, matmul=matmul)
+def _make(d, layers, vocab, name, head_dim=16, chunk=128):
+    # Scan/matmul backend is not a config concern: select it at run time
+    # with ``repro.core.engine.use_backend(...)`` (auto picks Pallas on TPU).
+    goom = GoomSSMCfg(d_model=d, head_dim=head_dim, chunk=chunk)
     # the paper's layer contains its own norm/GLU/projection: no channel mixer
     blk = BlockCfg(mixer="goom_ssm", channel="none", goom=goom, norm="ln")
     return LMConfig(

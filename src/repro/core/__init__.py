@@ -1,4 +1,9 @@
-"""GOOM core: representation, ops, scans, and the paper's experiments 1–2."""
+"""GOOM core: representation, ops, scans, and the paper's experiments 1–2.
+
+``repro.core.engine`` is the dispatching entry point for recurrences/LMME
+(auto-selected Pallas kernels); the functions re-exported here from
+``.scan``/``.ops`` are the XLA reference layer the engine falls back to.
+"""
 
 from .goom import (
     Goom,

@@ -9,14 +9,13 @@ for Complex64-equivalent GOOMs.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from . import engine
 from .goom import Goom, to_goom
-from .ops import lmme_reference
-from .scan import cumulative_lmme
 
 __all__ = ["float_chain_survival", "goom_chain", "goom_chain_parallel", "ChainResult"]
 
@@ -54,15 +53,14 @@ def float_chain_survival(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32
     return ChainResult(steps, jnp.log(fro))
 
 
-def goom_chain(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32,
-               matmul: Callable = lmme_reference) -> ChainResult:
+def goom_chain(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32) -> ChainResult:
     """Run the chain over GOOMs, sequentially (lax.scan of LMME)."""
     k0, k1 = jax.random.split(key)
     s0 = to_goom(jax.random.normal(k0, (d, d), dtype))
 
     def step(s, k):
         a = to_goom(jax.random.normal(k, (d, d), dtype))
-        return matmul(a, s), None
+        return engine.lmme(a, s), None
 
     keys = jax.random.split(k1, n_steps)
     s, _ = jax.lax.scan(step, s0, keys)
@@ -79,11 +77,10 @@ def goom_chain(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32,
     return ChainResult(steps, fro)
 
 
-def goom_chain_parallel(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32,
-                        matmul: Callable = lmme_reference) -> Goom:
+def goom_chain_parallel(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32) -> Goom:
     """All prefix states in parallel via PSCAN(LMME) (paper eq. 24 machinery)."""
     k0, k1 = jax.random.split(key)
     mats = jax.random.normal(k1, (n_steps, d, d), dtype)
     s0 = jax.random.normal(k0, (1, d, d), dtype)
     elems = to_goom(jnp.concatenate([s0, mats], axis=0))
-    return cumulative_lmme(elems, matmul=matmul)
+    return engine.cumulative_lmme(elems)

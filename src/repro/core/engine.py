@@ -1,0 +1,183 @@
+"""Scan engine: one API for every GOOM recurrence, with backend dispatch.
+
+Every model, experiment, benchmark, and serving path routes its recurrences
+through this module.  Callers never pass ``matmul=`` or block sizes — they
+pick a *backend* (usually implicitly, via ``auto``) and the engine selects
+the implementation, handling padding/unpadding and chunking internally.
+
+Public ops
+----------
+  ``lmme(a, b)``                     log-matmul-exp (paper eq. 9)
+  ``diagonal_scan(a, b, x0)``        x_t = a_t ⊙ x_{t-1} ⊕ b_t
+  ``matrix_scan(a, b, x0)``          X_t = A_t X_{t-1} ⊕ B_t   (fused kernel)
+  ``cumulative_lmme(a)``             PSCAN(LMME): A_t ··· A_1  (paper eq. 24)
+  ``selective_reset_scan(...)``      paper §5, with the engine's LMME inside
+
+Backend selection
+-----------------
+Requested (via ``use_backend`` / ``set_default_backend``, default ``auto``)
+resolves to a concrete backend per-call:
+
+  ========= ========== ============ =================================
+  requested platform   log dtype    resolved
+  ========= ========== ============ =================================
+  auto      tpu        float32      ``pallas_tpu``      (compiled)
+  auto      tpu        float64      ``xla_reference``   (kernels are f32)
+  auto      cpu / gpu  any          ``xla_reference``
+  pallas    tpu        any          ``pallas_tpu``
+  pallas    cpu / gpu  any          ``pallas_interpret`` (debug/parity)
+  reference any        any          ``xla_reference``
+  ========= ========== ============ =================================
+
+The three concrete names may also be requested literally to force a path
+(parity tests force ``pallas_interpret`` on CPU).
+
+Overrides
+---------
+    from repro.core import engine
+
+    with engine.use_backend("pallas"):          # scoped
+        states = engine.matrix_scan(a, b)
+
+    engine.set_default_backend("reference")     # process-wide default
+
+``use_backend`` affects *tracing*: a ``jax.jit``-compiled function captures
+the backend that was active when it was first traced — construct jitted
+step functions under the backend you intend to serve with.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+
+from .goom import Goom
+from . import scan as _scan
+
+__all__ = [
+    "EngineConfig",
+    "use_backend",
+    "set_default_backend",
+    "get_config",
+    "resolved_backend",
+    "lmme",
+    "diagonal_scan",
+    "matrix_scan",
+    "cumulative_lmme",
+    "selective_reset_scan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-wide knobs.  Block sizes are *hints*: the kernel wrappers clamp
+    them to the (padded) problem, so small shapes never over-pad."""
+
+    backend: str = "auto"
+    block_t: int = 256        # diagonal scan: time block
+    block_c: int = 512        # diagonal scan: channel block
+    block_t_matrix: int = 128  # matrix scan: time chunk
+    block_n: int = 128        # lmme tiles
+    block_m: int = 128
+    block_d: int = 128
+
+
+_DEFAULT = EngineConfig()
+_STACK: list = []
+
+
+def get_config() -> EngineConfig:
+    return _STACK[-1] if _STACK else _DEFAULT
+
+
+def set_default_backend(backend: str) -> None:
+    """Set the process-wide default backend (outside any ``use_backend``)."""
+    global _DEFAULT
+    _DEFAULT = dataclasses.replace(_DEFAULT, backend=backend)
+
+
+@contextlib.contextmanager
+def use_backend(backend: str = "auto", **overrides):
+    """Scoped backend/config override (see module docstring for names)."""
+    cfg = dataclasses.replace(get_config(), backend=backend, **overrides)
+    _STACK.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _STACK.pop()
+
+
+def _blocks(cfg: EngineConfig) -> dict:
+    return {
+        "block_t": cfg.block_t,
+        "block_c": cfg.block_c,
+        "block_t_matrix": cfg.block_t_matrix,
+        "block_n": cfg.block_n,
+        "block_m": cfg.block_m,
+        "block_d": cfg.block_d,
+    }
+
+
+def resolved_backend(dtype=None) -> str:
+    """The concrete backend the current config resolves to for ``dtype``."""
+    from repro.kernels import dispatch  # lazy: keeps `import repro.core` light
+
+    import jax.numpy as jnp
+
+    return dispatch.resolve_backend(
+        get_config().backend, dtype=jnp.float32 if dtype is None else dtype
+    )
+
+
+def _impl(op: str, dtype) -> Callable:
+    from repro.kernels import dispatch
+
+    cfg = get_config()
+    resolved = dispatch.resolve_backend(cfg.backend, dtype=dtype)
+    return dispatch.get_impl(op, resolved, _blocks(cfg))
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+def lmme(a: Goom, b: Goom) -> Goom:
+    """LMME over GOOMs: (..., n, d) ∘ (..., d, m), batch dims broadcast."""
+    return _impl("lmme", a.dtype)(a, b)
+
+
+def diagonal_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+    """All states of x_t = a_t ⊙ x_{t-1} ⊕ b_t over the leading axis."""
+    return _impl("diagonal_scan", a.dtype)(a, b, x0)
+
+
+def matrix_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+    """All states of X_t = A_t X_{t-1} ⊕ B_t (fused PSCAN∘LMME on Pallas)."""
+    return _impl("matrix_scan", a.dtype)(a, b, x0)
+
+
+def cumulative_lmme(a: Goom) -> Goom:
+    """All prefix products A_t ··· A_1 (paper eq. 24's scan)."""
+    return _impl("cumulative_lmme", a.dtype)(a)
+
+
+def selective_reset_scan(
+    a: Goom,
+    select_fn: Callable[[Goom], jax.Array],
+    reset_fn: Callable[[Goom], Goom],
+    *,
+    reset_only_state_compounds: bool = True,
+) -> Tuple[Goom, jax.Array]:
+    """Selective-resetting scan (paper §5) with the engine's LMME inside.
+
+    The reset combine is data-dependent control flow that XLA's associative
+    scan already handles; the engine routes its inner matrix products to the
+    backend-selected LMME, which is where the flops are.
+    """
+    return _scan.selective_reset_scan(
+        a, select_fn, reset_fn,
+        matmul=_impl("lmme", a.dtype),
+        reset_only_state_compounds=reset_only_state_compounds,
+    )

@@ -54,8 +54,18 @@ LOG_ZERO = _FINITE_FLOOR[jnp.dtype(jnp.float32)]  # convenience constant
 
 
 def finite_floor(dtype) -> float:
-    """The finite value used to represent log(0) for ``dtype`` (paper fn. 5)."""
-    return _FINITE_FLOOR[jnp.dtype(dtype)]
+    """The finite value used to represent log(0) for ``dtype`` (paper fn. 5).
+
+    Unknown / low-precision dtypes (float16, integer promotions, ...) fall
+    back to the float32 floor: a log-plane narrower than float32 cannot hold
+    its own ``2*log(tiny)`` anyway, and the f32 floor is a valid exact-zero
+    sentinel for every wider plane.
+    """
+    try:
+        dt = jnp.dtype(dtype)
+    except TypeError:
+        dt = jnp.dtype(jnp.float32)
+    return _FINITE_FLOOR.get(dt, _FINITE_FLOOR[jnp.dtype(jnp.float32)])
 
 
 def _eps(dtype) -> float:
@@ -150,7 +160,8 @@ def safe_log(x: jax.Array, use_floor: bool = False) -> jax.Array:
 @safe_log.defjvp
 def _safe_log_jvp(use_floor, primals, tangents):
     (x,), (dx,) = primals, tangents
-    eps = jnp.asarray(_eps(x.dtype), x.dtype)
+    dt = jnp.result_type(x)  # x may be a python scalar: no .dtype attribute
+    eps = jnp.asarray(_eps(dt), dt)
     return safe_log(x, use_floor), dx / (x + eps)
 
 

@@ -21,14 +21,10 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import engine
 from .goom import Goom, from_goom, to_goom
-from .ops import goom_lse, goom_normalize_cols, lmme_reference
-from .scan import (
-    colinearity_select,
-    cumulative_lmme,
-    orthonormal_reset,
-    selective_reset_scan,
-)
+from .ops import goom_lse, goom_normalize_cols
+from .scan import colinearity_select, orthonormal_reset
 
 __all__ = [
     "DynamicalSystem",
@@ -181,7 +177,6 @@ def spectrum_parallel(
     *,
     colinearity_threshold: float = 0.99,
     chunk_size: Optional[int] = 128,
-    matmul=lmme_reference,
 ) -> jax.Array:
     """Full spectrum, time-parallel, with selective resetting over GOOMs.
 
@@ -213,7 +208,7 @@ def spectrum_parallel(
         # Elements: [S_0, J_1, ..., J_{T-1}]  (paper App. C folds X_0 in).
         elems = to_goom(jnp.concatenate([s0, jacobians[:-1]], axis=0))
         # (a) all input states S_0..S_{T-1}, with selective resets.
-        states, _ = selective_reset_scan(elems, select, reset, matmul=matmul)
+        states, _ = engine.selective_reset_scan(elems, select, reset)
         # (b) orthonormal bases: log-normalize columns -> exp -> QR.
         v = from_goom(goom_normalize_cols(states))
         q, _ = jnp.linalg.qr(v)  # batched over T
@@ -231,7 +226,7 @@ def spectrum_parallel(
     def chunk_step(q_in, js_k):
         x0 = js_k[0] @ q_in
         elems = to_goom(jnp.concatenate([x0[None], js_k[1:]], axis=0))
-        states, _ = selective_reset_scan(elems, select, reset, matmul=matmul)
+        states, _ = engine.selective_reset_scan(elems, select, reset)
         v = from_goom(goom_normalize_cols(states))
         q, _ = jnp.linalg.qr(v)
         q_prev = jnp.concatenate([q_in[None], q[:-1]], axis=0)
@@ -244,7 +239,7 @@ def spectrum_parallel(
     return jnp.mean(logs, axis=(0, 1)) / dt
 
 
-def lle_parallel(jacobians: jax.Array, dt: float, *, matmul=lmme_reference) -> jax.Array:
+def lle_parallel(jacobians: jax.Array, dt: float) -> jax.Array:
     """Largest exponent via PSCAN(LMME) (paper eq. 24 / App. B)."""
     t, d = jacobians.shape[0], jacobians.shape[-1]
     u0 = jnp.ones((d,), jacobians.dtype) / jnp.sqrt(jnp.asarray(d, jacobians.dtype))
@@ -252,7 +247,7 @@ def lle_parallel(jacobians: jax.Array, dt: float, *, matmul=lmme_reference) -> j
     # share one shape; products keep column 0 == s_t (other columns are 0).
     u0_mat = jnp.zeros((d, d), jacobians.dtype).at[:, 0].set(u0)
     elems = to_goom(jnp.concatenate([u0_mat[None], jacobians], axis=0))
-    states = cumulative_lmme(elems, matmul=matmul)  # (T+1, d, d)
+    states = engine.cumulative_lmme(elems)  # (T+1, d, d)
     final = states[-1][..., :, 0]  # s_T
     doubled = Goom(2.0 * final.log_abs, jnp.ones_like(final.sign))
     log_norm_sq = goom_lse(doubled, axis=-1).log_abs

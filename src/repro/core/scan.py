@@ -1,5 +1,11 @@
 """Parallel prefix scans of linear recurrences over GOOMs (paper §4.2, §5).
 
+This module is the *XLA reference layer*: pure ``jax.lax.associative_scan``
+implementations that double as the numerical/autodiff oracles for the
+Pallas kernels.  Application code should call ``repro.core.engine`` (which
+dispatches between these and the kernels) rather than this module; the
+``matmul=`` keywords below are internal plumbing for the engine.
+
 Conventions
 -----------
 Scans run over the *leading* axis (time).  For a recurrence

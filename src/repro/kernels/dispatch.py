@@ -1,0 +1,195 @@
+"""Backend resolution for the scan engine.
+
+Maps a *requested* backend (user/config intent) to a *resolved* backend
+(what actually runs), given the platform and operand dtype:
+
+  requested        platform   dtype        resolved
+  ---------        --------   -----        --------
+  auto             tpu        f32          pallas_tpu
+  auto             tpu        f64/other    xla_reference  (kernels are f32)
+  auto             cpu/gpu    any          xla_reference  (interpret mode is
+                                           a debug path, never a perf win)
+  pallas           tpu        any->f32     pallas_tpu
+  pallas           cpu/gpu    any->f32     pallas_interpret
+  reference        any        any          xla_reference
+
+``pallas_tpu`` / ``pallas_interpret`` / ``xla_reference`` may also be
+requested literally (forced), which is what the parity tests do.
+
+This module owns the kernel-facing callables (padding and chunking live in
+``kernels/*/ops.py``); the user-facing API with config overrides is
+``repro.core.engine``.  Nothing outside ``kernels/`` should ever pass
+``matmul=`` or block sizes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goom import Goom
+from repro.core.ops import lmme_reference
+from repro.core import scan as _scan
+
+from .goom_scan import goom_scan_pallas, matrix_scan_pallas
+from .lmme import lmme_pallas
+
+__all__ = ["BACKENDS", "resolve_backend", "get_impl"]
+
+BACKENDS = ("auto", "pallas", "reference",
+            "pallas_tpu", "pallas_interpret", "xla_reference")
+
+
+def resolve_backend(requested: str, *, dtype=jnp.float32) -> str:
+    """Resolve a requested backend name to one of the three concrete ones."""
+    if requested in ("reference", "xla_reference"):
+        return "xla_reference"
+    if requested in ("pallas_tpu", "pallas_interpret"):
+        return requested  # forced: trust the caller (tests, debugging)
+    platform = jax.default_backend()
+    if requested == "pallas":
+        return "pallas_tpu" if platform == "tpu" else "pallas_interpret"
+    if requested != "auto":
+        raise ValueError(f"unknown backend {requested!r}; one of {BACKENDS}")
+    if platform == "tpu" and jnp.dtype(dtype) == jnp.dtype(jnp.float32):
+        return "pallas_tpu"
+    return "xla_reference"
+
+
+# ---------------------------------------------------------------------------
+# concrete implementations, keyed by resolved backend
+# ---------------------------------------------------------------------------
+def _lmme(resolved: str, blocks: dict):
+    if resolved == "xla_reference":
+        return lmme_reference
+
+    def f(a: Goom, b: Goom) -> Goom:
+        return lmme_pallas(
+            a, b,
+            block_n=blocks["block_n"], block_m=blocks["block_m"],
+            block_d=blocks["block_d"],
+            interpret=resolved == "pallas_interpret",
+        )
+
+    return f
+
+
+def _broadcast_goom(g: Goom, shape) -> Goom:
+    return Goom(jnp.broadcast_to(g.log_abs, shape),
+                jnp.broadcast_to(g.sign, shape))
+
+
+def _diagonal_scan(resolved: str, blocks: dict):
+    if resolved == "xla_reference":
+        def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+            # match the kernel wrappers: a/b broadcast to a common shape
+            # (associative_scan itself requires identical operand shapes)
+            shape = jnp.broadcast_shapes(a.shape, b.shape)
+            x0b = None if x0 is None else _broadcast_goom(x0, shape[1:])
+            return _scan.diagonal_scan(
+                _broadcast_goom(a, shape), _broadcast_goom(b, shape), x0b)
+
+        return ref
+
+    def f(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+        return goom_scan_pallas(
+            a, b, x0,
+            block_t=blocks["block_t"], block_c=blocks["block_c"],
+            interpret=resolved == "pallas_interpret",
+        )
+
+    return f
+
+
+def _matrix_ref_chunked(a: Goom, b: Goom, x0: Optional[Goom], chunk: int) -> Goom:
+    """Reference matrix scan, chunked over time for bounded memory.
+
+    Within a chunk the full O(log L) associative scan runs; the entering
+    state is carried sequentially across chunks (same recurrence algebra as
+    the fused kernel's VMEM carry, so results match the plain reference).
+    """
+    t = b.shape[0]
+    batch = jnp.broadcast_shapes(a.shape[1:-2], b.shape[1:-2])
+    a = _broadcast_goom(a, (t,) + batch + a.shape[-2:])
+    b = _broadcast_goom(b, (t,) + batch + b.shape[-2:])
+    if x0 is not None:
+        x0 = _broadcast_goom(x0, batch + b.shape[-2:])
+    if t <= chunk or t % chunk:
+        return _scan.matrix_scan(a, b, x0, matmul=lmme_reference)
+    nc = t // chunk
+
+    def resh(g: Goom) -> Goom:
+        return Goom(g.log_abs.reshape((nc, chunk) + g.shape[1:]),
+                    g.sign.reshape((nc, chunk) + g.shape[1:]))
+
+    if x0 is None:
+        x0 = Goom(jnp.full(b.shape[1:], -jnp.inf, jnp.float32),
+                  jnp.ones(b.shape[1:], jnp.float32))
+
+    @jax.checkpoint
+    def outer(carry: Goom, ab):
+        a_k, b_k = ab
+        states = _scan.matrix_scan(a_k, b_k, carry, matmul=lmme_reference)
+        return states[-1], states
+
+    _, states_c = jax.lax.scan(outer, x0, (resh(a), resh(b)))
+    return Goom(states_c.log_abs.reshape((t,) + states_c.shape[2:]),
+                states_c.sign.reshape((t,) + states_c.shape[2:]))
+
+
+def _matrix_scan(resolved: str, blocks: dict):
+    if resolved == "xla_reference":
+        def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+            return _matrix_ref_chunked(a, b, x0, blocks["block_t_matrix"])
+
+        return ref
+
+    def f(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+        return matrix_scan_pallas(
+            a, b, x0,
+            block_t=blocks["block_t_matrix"],
+            interpret=resolved == "pallas_interpret",
+        )
+
+    return f
+
+
+def _cumulative_lmme(resolved: str, blocks: dict):
+    if resolved == "xla_reference":
+        def ref(a: Goom) -> Goom:
+            return _scan.cumulative_lmme(a, matmul=lmme_reference)
+
+        return ref
+
+    def f(a: Goom) -> Goom:
+        # A_t···A_1 == matrix recurrence with B = 0 and X_0 = I: the fused
+        # kernel computes it with zero extra machinery.
+        d = a.shape[-1]
+        eye = Goom(
+            jnp.where(jnp.eye(d, dtype=bool), 0.0, -jnp.inf).astype(jnp.float32),
+            jnp.ones((d, d), jnp.float32),
+        )
+        zeros = Goom(jnp.full(a.shape, -jnp.inf, jnp.float32),
+                     jnp.ones(a.shape, jnp.float32))
+        return matrix_scan_pallas(
+            a, zeros, eye,
+            block_t=blocks["block_t_matrix"],
+            interpret=resolved == "pallas_interpret",
+        )
+
+    return f
+
+
+_IMPLS = {
+    "lmme": _lmme,
+    "diagonal_scan": _diagonal_scan,
+    "matrix_scan": _matrix_scan,
+    "cumulative_lmme": _cumulative_lmme,
+}
+
+
+def get_impl(op: str, resolved: str, blocks: dict):
+    """Return the callable implementing ``op`` on the resolved backend."""
+    return _IMPLS[op](resolved, blocks)

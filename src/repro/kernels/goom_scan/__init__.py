@@ -1,0 +1,3 @@
+from .ops import goom_scan_pallas, matrix_scan_pallas
+
+__all__ = ["goom_scan_pallas", "matrix_scan_pallas"]

@@ -25,12 +25,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+# Finite stand-in for -inf maxima, mirroring kernels/lmme/lmme.py: anything
+# at or below _NEG is an exact zero for combining purposes.
+_NEG = -1e30
+
+
 def _lse2(l1, s1, l2, s2):
-    """Signed LSE of two (log, sign) pairs; -inf == exact zero."""
+    """Signed LSE of two (log, sign) pairs; -inf == exact zero.
+
+    The zero-zero path (both logs -inf, or compounded floors below ``_NEG``)
+    is explicit: the result is forced to (-inf, +1) through a double-where so
+    neither the primal nor a jit'd gradient ever evaluates ``log(0)`` on a
+    live branch — previously the -inf result fell out of ``jnp.log(0)`` only
+    by accident and NaN'd under differentiation."""
     m = jnp.maximum(l1, l2)
-    m = jnp.where(m > -jnp.inf, m, 0.0)
-    t = s1 * jnp.exp(l1 - m) + s2 * jnp.exp(l2 - m)
-    return jnp.log(jnp.abs(t)) + m, jnp.where(t >= 0, 1.0, -1.0)
+    m_safe = jnp.where(m <= _NEG, 0.0, m)
+    t = s1 * jnp.exp(l1 - m_safe) + s2 * jnp.exp(l2 - m_safe)
+    mag = jnp.abs(t)
+    is_zero = (m <= _NEG) | (mag == 0.0)  # all-zero inputs or exact cancellation
+    log = jnp.where(is_zero, -jnp.inf, jnp.log(jnp.where(is_zero, 1.0, mag)) + m_safe)
+    return log, jnp.where(t >= 0, 1.0, -1.0)
 
 
 def _combine(e, l):

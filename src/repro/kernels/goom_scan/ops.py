@@ -1,0 +1,252 @@
+"""Public jit'd wrappers for the GOOM scan kernels (diagonal + matrix).
+
+Callers never see block-divisibility constraints: both wrappers
+
+  * flatten arbitrary batch/trailing dims into the kernels' canonical
+    layouts ((T, C) planes for the diagonal scan, (G, T, d, m) for the
+    matrix scan);
+  * pad the time axis with *identity* scan elements (A = 1 / I at log 0,
+    B = exact zero at log -inf) and feature axes with exact zeros — both
+    are no-ops under the recurrence, so results are exact after slicing;
+  * attach a ``jax.custom_vjp`` whose backward pass is JAX autodiff of the
+    corresponding ``core.scan`` reference on the saved inputs (the same
+    mathematical function), making both kernels trainable.
+
+Backend choice (compiled TPU vs interpret) belongs to the dispatch layer
+(``repro.kernels.dispatch`` / ``repro.core.engine``) — these wrappers only
+take an explicit ``interpret`` flag.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goom import Goom
+from repro.core.scan import diagonal_scan as _diag_ref
+from repro.core.scan import matrix_scan as _matrix_ref
+
+from .goom_scan import goom_scan_kernel_call
+from .matrix_scan import matrix_scan_kernel_call
+
+__all__ = ["goom_scan_pallas", "matrix_scan_pallas"]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_axis(x: jax.Array, axis: int, target: int, fill: float) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+# diagonal scan:  x_t = a_t ⊙ x_{t-1} ⊕ b_t
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                  block_t, block_c, interpret):
+    return goom_scan_kernel_call(
+        a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+        block_t=block_t, block_c=block_c, interpret=interpret,
+    )
+
+
+def _dscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+               block_t, block_c, interpret):
+    out = _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                        block_t, block_c, interpret)
+    return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
+
+
+def _dscan_bwd(block_t, block_c, interpret, res, cts):
+    a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
+    g_log, _g_sign = cts  # sign planes are piecewise-constant: no cotangent
+
+    def f(al, bl, xl):
+        out = _diag_ref(Goom(al, a_sign), Goom(bl, b_sign),
+                        x0=Goom(xl[0], x0_sign[0]))
+        return out.log_abs
+
+    _, vjp = jax.vjp(f, a_log, b_log, x0_log)
+    d_al, d_bl, d_xl = vjp(g_log)
+    return (d_al, jnp.zeros_like(a_sign), d_bl, jnp.zeros_like(b_sign),
+            d_xl, jnp.zeros_like(x0_sign))
+
+
+_dscan_planes.defvjp(_dscan_fwd, _dscan_bwd)
+
+
+def goom_scan_pallas(
+    a: Goom,
+    b: Goom,
+    x0: Goom | None = None,
+    *,
+    block_t: int = 256,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> Goom:
+    """Diagonal GOOM scan via the Pallas kernel; any (T, ...) shape.
+
+    ``a``/``b``: (T, ...) Gooms (broadcast to a common shape); ``x0``: (...)
+    entering state, default exact zero.  Returns all states, (T, ...).
+    """
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    t, trail = shape[0], shape[1:]
+    c = math.prod(trail) if trail else 1
+
+    def planes(g: Goom):
+        log = jnp.broadcast_to(g.log_abs, shape).reshape(t, c)
+        sign = jnp.broadcast_to(g.sign, shape).reshape(t, c)
+        return log.astype(jnp.float32), sign.astype(jnp.float32)
+
+    al, asn = planes(a)
+    bl, bsn = planes(b)
+    if x0 is None:
+        xl = jnp.full((1, c), -jnp.inf, jnp.float32)
+        xs = jnp.ones((1, c), jnp.float32)
+    else:
+        xl = jnp.broadcast_to(x0.log_abs, trail).reshape(1, c).astype(jnp.float32)
+        xs = jnp.broadcast_to(x0.sign, trail).reshape(1, c).astype(jnp.float32)
+
+    # Clamp block sizes to the (sublane/lane-aligned) problem, then pad.
+    lane = 8 if interpret else 128
+    bt = min(block_t, _ceil_mult(t, 8))
+    bc = min(block_c, _ceil_mult(c, lane))
+    tp, cp = _ceil_mult(t, bt), _ceil_mult(c, bc)
+
+    # Time pads are identity elements (a=1, b=0); channel pads are exact
+    # zeros — both leave real outputs untouched (sliced off below).
+    al = _pad_axis(_pad_axis(al, 0, tp, 0.0), 1, cp, 0.0)
+    asn = _pad_axis(_pad_axis(asn, 0, tp, 1.0), 1, cp, 1.0)
+    bl = _pad_axis(_pad_axis(bl, 0, tp, -jnp.inf), 1, cp, -jnp.inf)
+    bsn = _pad_axis(_pad_axis(bsn, 0, tp, 1.0), 1, cp, 1.0)
+    xl = _pad_axis(xl, 1, cp, -jnp.inf)
+    xs = _pad_axis(xs, 1, cp, 1.0)
+
+    x_log, x_sign = _dscan_planes(al, asn, bl, bsn, xl, xs, bt, bc, interpret)
+    return Goom(x_log[:t, :c].reshape((t,) + trail),
+                x_sign[:t, :c].reshape((t,) + trail))
+
+
+# ---------------------------------------------------------------------------
+# matrix scan:  X_t = A_t X_{t-1} ⊕ B_t
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                  block_t, interpret):
+    return matrix_scan_kernel_call(
+        a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+        block_t=block_t, interpret=interpret,
+    )
+
+
+def _mscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+               block_t, interpret):
+    out = _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                        block_t, interpret)
+    return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
+
+
+def _mscan_bwd(block_t, interpret, res, cts):
+    a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
+    g_log, _g_sign = cts
+
+    def f(al, bl, xl):
+        # planes are (G, T, ...); the reference scans the leading axis
+        out = _matrix_ref(
+            Goom(jnp.swapaxes(al, 0, 1), jnp.swapaxes(a_sign, 0, 1)),
+            Goom(jnp.swapaxes(bl, 0, 1), jnp.swapaxes(b_sign, 0, 1)),
+            x0=Goom(xl[:, 0], x0_sign[:, 0]),
+        )
+        return jnp.swapaxes(out.log_abs, 0, 1)
+
+    _, vjp = jax.vjp(f, a_log, b_log, x0_log)
+    d_al, d_bl, d_xl = vjp(g_log)
+    return (d_al, jnp.zeros_like(a_sign), d_bl, jnp.zeros_like(b_sign),
+            d_xl, jnp.zeros_like(x0_sign))
+
+
+_mscan_planes.defvjp(_mscan_fwd, _mscan_bwd)
+
+
+def matrix_scan_pallas(
+    a: Goom,
+    b: Goom,
+    x0: Goom | None = None,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> Goom:
+    """Matrix GOOM scan via the fused PSCAN∘LMME Pallas kernel.
+
+    ``a``: (T, ..., d, d) transitions; ``b``: (T, ..., d, m) biases (batch
+    dims broadcast); ``x0``: (..., d, m) entering state, default exact zero.
+    Returns all states, (T, ..., d, m).
+
+    d and m are padded to sublane multiples (8) with exact zeros — a no-op
+    under the recurrence, and bounded at ≤8x for column states (m=1).
+    Lane-dim residue below 128 is left to Mosaic's masking rather than
+    padded here: materializing 128-wide HBM planes for m=1 recurrences
+    would be a 128x traffic blowup.
+    """
+    d = a.shape[-1]
+    m = b.shape[-1]
+    t = a.shape[0]
+    batch = jnp.broadcast_shapes(a.shape[1:-2], b.shape[1:-2])
+    g = math.prod(batch) if batch else 1
+
+    def planes(x: jax.Array, last2) -> jax.Array:
+        x = jnp.broadcast_to(x, (t,) + batch + last2)
+        x = x.reshape((t, g) + last2)
+        return jnp.swapaxes(x, 0, 1).astype(jnp.float32)  # (G, T, *last2)
+
+    al, asn = planes(a.log_abs, (d, d)), planes(a.sign, (d, d))
+    bl, bsn = planes(b.log_abs, (d, m)), planes(b.sign, (d, m))
+    if x0 is None:
+        xl = jnp.full((g, 1, d, m), -jnp.inf, jnp.float32)
+        xs = jnp.ones((g, 1, d, m), jnp.float32)
+    else:
+        xl = jnp.broadcast_to(x0.log_abs, batch + (d, m))
+        xl = xl.reshape(g, 1, d, m).astype(jnp.float32)
+        xs = jnp.broadcast_to(x0.sign, batch + (d, m))
+        xs = xs.reshape(g, 1, d, m).astype(jnp.float32)
+
+    # Pad features to sublane multiples with exact zeros, time to the block
+    # size with identity elements (A = I, B = 0).
+    dp, mp = _ceil_mult(d, 8), _ceil_mult(m, 8)
+    bt = min(block_t, _ceil_mult(t, 8))
+    tp = _ceil_mult(t, bt)
+
+    def pad_feat(x, rows, cols, fill):
+        return _pad_axis(_pad_axis(x, -2, rows, fill), -1, cols, fill)
+
+    # A is contracted against itself: its columns are also rows downstream,
+    # so both of its feature axes get the row padding dp.
+    al = pad_feat(al, dp, dp, -jnp.inf)
+    asn = pad_feat(asn, dp, dp, 1.0)
+    bl = pad_feat(bl, dp, mp, -jnp.inf)
+    bsn = pad_feat(bsn, dp, mp, 1.0)
+    xl = pad_feat(xl, dp, mp, -jnp.inf)
+    xs = pad_feat(xs, dp, mp, 1.0)
+
+    if tp != t:
+        eye_log = jnp.where(jnp.eye(dp, dtype=bool), 0.0, -jnp.inf)
+        a_pad_log = jnp.broadcast_to(eye_log, (g, tp - t, dp, dp))
+        al = jnp.concatenate([al, a_pad_log.astype(jnp.float32)], axis=1)
+        asn = _pad_axis(asn, 1, tp, 1.0)
+        bl = _pad_axis(bl, 1, tp, -jnp.inf)
+        bsn = _pad_axis(bsn, 1, tp, 1.0)
+
+    x_log, x_sign = _mscan_planes(al, asn, bl, bsn, xl, xs, bt, interpret)
+    x_log = jnp.swapaxes(x_log[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
+    x_sign = jnp.swapaxes(x_sign[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
+    return Goom(x_log, x_sign)

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
+from repro.core import engine
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.common import unzip
 from repro.models.model import DecoderLM
@@ -59,6 +60,10 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--mesh", default="host", choices=["host", "production",
                                                        "production-multipod"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "reference"],
+                    help="scan-engine backend for all GOOM recurrences "
+                         "(repro.core.engine; auto = Pallas kernels on TPU)")
     ap.add_argument("--grad-compression", default=None, choices=[None, "int8"])
     ap.add_argument("--straggler-factor", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -98,7 +103,7 @@ def main(argv=None):
     s_shard = state_shardings(rules, state_abs, p_shard)
     batch_sharding = rules.sharding((args.batch, args.seq_len), ["batch", None])
 
-    with mesh, use_rules(rules):
+    with mesh, use_rules(rules), engine.use_backend(args.backend):
         jit_step = jax.jit(step_fn, in_shardings=(s_shard, None),
                            out_shardings=(s_shard, NamedSharding(mesh, P())),
                            donate_argnums=(0,))

@@ -26,8 +26,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.goom import Goom, from_goom, to_goom
-from ..core.ops import goom_lse, lmme_reference, scaled_exp
+from ..core import engine
+from ..core.goom import Goom, to_goom
+from ..core.ops import goom_lse, scaled_exp
 from ..sharding import constrain
 from .common import KeyGen, Param, dense_init, dense_apply, normal
 from .norms import layernorm_apply, layernorm_init
@@ -38,21 +39,14 @@ class GoomSSMCfg:
     d_model: int
     head_dim: int = 16          # d of the per-head state-space model
     chunk: int = 128
-    matmul: str = "reference"   # "reference" (paper compromise) | "pallas"
     scan_variant: str = "shared_a"  # "shared_a" (time-invariant A doubling,
                                     # §Perf) | "generic" (paper-literal eq.26)
+    # Backend (reference vs Pallas kernels) is not a layer concern: wrap the
+    # call — or step-function construction — in ``engine.use_backend(...)``.
 
     @property
     def n_heads(self) -> int:
         return self.d_model // self.head_dim
-
-
-def _matmul_fn(cfg: GoomSSMCfg):
-    if cfg.matmul == "pallas":
-        from ..kernels.lmme import lmme_pallas
-
-        return lmme_pallas
-    return lmme_reference
 
 
 def goom_ssm_init(keygen: KeyGen, cfg: GoomSSMCfg, dtype=jnp.float32):
@@ -84,7 +78,6 @@ def _goom_ssm_scan_shared_a(
     bu_g: Goom,     # (S, B, H, d, 1) inputs B·u_t, GOOM
     x0: Optional[Goom],  # (B, H, d, 1) entering state or None
     chunk: int,
-    matmul,
 ) -> Tuple[Goom, Goom]:
     """Prefix states exploiting the time-invariant A (§Perf, beyond-paper).
 
@@ -118,14 +111,14 @@ def _goom_ssm_scan_shared_a(
                 jnp.concatenate(
                     [jnp.ones(pad_shape, b.sign.dtype), b.sign[:-k]]),
             )
-            contrib = matmul(a_pow, shifted)
+            contrib = engine.lmme(a_pow, shifted)
             b = goom_lse(
                 Goom(jnp.stack([contrib.log_abs, b.log_abs]),
                      jnp.stack([contrib.sign, b.sign])),
                 axis=0,
             )
             if 2 * k < L:
-                a_pow = matmul(a_pow, a_pow)
+                a_pow = engine.lmme(a_pow, a_pow)
             k *= 2
         return b
 
@@ -144,7 +137,7 @@ def _goom_ssm_scan_shared_a(
     @jax.checkpoint
     def outer(x_carry: Goom, b_chunk: Goom):
         # fold the carry into the first element: b_1 ← LSE(b_1, A·x0)
-        ax = matmul(a_g, x_carry)  # (B,H,d,1)
+        ax = engine.lmme(a_g, x_carry)  # (B,H,d,1)
         first = goom_lse(
             Goom(jnp.stack([ax.log_abs, b_chunk.log_abs[0]]),
                  jnp.stack([ax.sign, b_chunk.sign[0]])),
@@ -171,92 +164,34 @@ def _goom_ssm_scan(
     bu_g: Goom,     # (S, B, H, d, 1) inputs B·u_t, GOOM
     x0: Optional[Goom],  # (B, H, d, 1) entering state or None
     chunk: int,
-    matmul,
 ) -> Tuple[Goom, Goom]:
-    """All states x'_t, via chunked parallel prefix scan (paper eq. 26).
+    """All states x'_t, via the engine's matrix scan (paper eq. 26).
 
-    Returns (states (S,B,H,d,1), final state (B,H,d,1))."""
-    s = bu_g.shape[0]
-    L = min(chunk, s)
-    assert s % L == 0
-    nc = s // L
+    The paper-literal path: (A, B·u_t) compound pairs through PSCAN∘LMME.
+    Chunking for memory and the fused-kernel dispatch both live inside
+    ``engine.matrix_scan``.  The batch rides in the state *columns* —
+    the recurrence is column-independent and A is shared across B, so this
+    avoids duplicating A over the batch and hands the MXU m=B columns
+    instead of 1.  Returns (states (S,B,H,d,1), final (B,H,d,1)).
+    """
+    del chunk  # chunk size is an engine/backend concern now
+    s, bsz, h = bu_g.shape[:3]
+    d = a_g.shape[-1]
 
-    def reshape_chunks(g: Goom) -> Goom:
-        return Goom(
-            g.log_abs.reshape((nc, L) + g.shape[1:]),
-            g.sign.reshape((nc, L) + g.shape[1:]),
-        )
+    def cols(g: Goom) -> Goom:  # (S,B,H,d,1) -> (S,H,d,B)
+        return Goom(g.log_abs[..., 0].transpose(0, 2, 3, 1),
+                    g.sign[..., 0].transpose(0, 2, 3, 1))
 
-    bu_c = reshape_chunks(bu_g)
-
-    # broadcast A across (L, B): scan elements are (A, B·u_t) pairs
-    def combine(e, l):
-        a_e, b_e = e
-        a_l, b_l = l
-        a = matmul(a_l, a_e)
-        ab = matmul(a_l, b_e)
-        b = goom_lse(
-            Goom(jnp.stack([ab.log_abs, b_l.log_abs]),
-                 jnp.stack([ab.sign, b_l.sign])),
-            axis=0,
-        )
-        return (a, b)
-
-    def chunk_scan(bu_chunk: Goom):
-        lead = bu_chunk.shape[:-2]  # (L, B, H)
-        a_b = Goom(
-            jnp.broadcast_to(a_g.log_abs, lead + a_g.shape[-2:]),
-            jnp.broadcast_to(a_g.sign, lead + a_g.shape[-2:]),
-        )
-        a_star, b_star = jax.lax.associative_scan(
-            combine, (a_b, bu_chunk), axis=0
-        )
-        return a_star, b_star
-
-    def outer(x_carry: Goom, bu_chunk: Goom):
-        a_star, b_star = chunk_scan(bu_chunk)
-        # x_t = A*_t x_carry ⊕ B*_t
-        ax = matmul(a_star, Goom(
-            jnp.broadcast_to(x_carry.log_abs, a_star.shape[:-2] + x_carry.shape[-2:]),
-            jnp.broadcast_to(x_carry.sign, a_star.shape[:-2] + x_carry.shape[-2:]),
-        ))
-        states = goom_lse(
-            Goom(jnp.stack([ax.log_abs, b_star.log_abs]),
-                 jnp.stack([ax.sign, b_star.sign])),
-            axis=0,
-        )
-        return states[-1], states
-
-    if x0 is None:
-        hd = a_g.shape[-1]
-        b, h = bu_g.shape[1], bu_g.shape[2]
-        x0 = to_goom(jnp.zeros((b, h, hd, 1), jnp.float32), use_floor=True)
-
-    carry = x0
-    all_states = []
-    # python loop over chunks keeps each chunk's scan graph small and lets
-    # XLA pipeline them; nc is static. For very long sequences use lax.scan.
-    if nc <= 8:
-        for c in range(nc):
-            carry, states = outer(carry, bu_c[c])
-            all_states.append(states)
-        states = Goom(
-            jnp.concatenate([g.log_abs for g in all_states], axis=0),
-            jnp.concatenate([g.sign for g in all_states], axis=0),
-        )
-        return states, carry
-
-    @jax.checkpoint
-    def scan_body(carry: Goom, bu_chunk: Goom):
-        carry, states = outer(carry, bu_chunk)
-        return carry, states
-
-    carry, states_c = jax.lax.scan(scan_body, carry, bu_c)
-    states = Goom(
-        states_c.log_abs.reshape((s,) + states_c.shape[2:]),
-        states_c.sign.reshape((s,) + states_c.shape[2:]),
-    )
-    return states, carry
+    a_b = Goom(jnp.broadcast_to(a_g.log_abs, (s, h, d, d)),
+               jnp.broadcast_to(a_g.sign, (s, h, d, d)))
+    x0c = None
+    if x0 is not None:  # (B,H,d,1) -> (H,d,B)
+        x0c = Goom(x0.log_abs[..., 0].transpose(1, 2, 0),
+                   x0.sign[..., 0].transpose(1, 2, 0))
+    states_c = engine.matrix_scan(a_b, cols(bu_g), x0c)  # (S,H,d,B)
+    states = Goom(states_c.log_abs.transpose(0, 3, 1, 2)[..., None],
+                  states_c.sign.transpose(0, 3, 1, 2)[..., None])
+    return states, states[-1]
 
 
 def goom_ssm_apply(
@@ -269,7 +204,6 @@ def goom_ssm_apply(
 ):
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
-    matmul = _matmul_fn(cfg)
 
     xin = layernorm_apply(p["ln"], x)
     u = dense_apply(p["in_proj"], xin, compute_dtype=jnp.float32)  # (B,S,H,hd)
@@ -285,7 +219,7 @@ def goom_ssm_apply(
         u_g.log_abs.transpose(1, 0, 2, 3)[..., None],   # (S,B,H,hd,1)
         u_g.sign.transpose(1, 0, 2, 3)[..., None],
     )
-    bu = matmul(b_g, u_col)  # broadcast (H,hd,hd) @ (S,B,H,hd,1)
+    bu = engine.lmme(b_g, u_col)  # broadcast (H,hd,hd) @ (S,B,H,hd,1)
 
     x0 = None
     if state is not None:
@@ -293,7 +227,7 @@ def goom_ssm_apply(
 
     scan_fn = (_goom_ssm_scan_shared_a if cfg.scan_variant == "shared_a"
                else _goom_ssm_scan)
-    states, final = scan_fn(a_g, bu, x0, cfg.chunk, matmul)
+    states, final = scan_fn(a_g, bu, x0, cfg.chunk)
 
     # back to floats via scaled exp (paper eq. 27), per position
     xs = Goom(

@@ -23,8 +23,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import engine
 from ..core.goom import Goom, from_goom, nonzero_sign, safe_abs, safe_log
-from ..core.ops import lmme_reference
 from ..sharding import constrain
 from .common import KeyGen, Param, dense_init, dense_apply, normal, scaled_normal
 from .norms import rmsnorm_apply, rmsnorm_init
@@ -47,22 +47,13 @@ def segment_states(
     Returns (states (L, ...), final state (...,)).
     """
     if impl == "goom":
-        def combine(e, l):
-            ea_l, eb_l, eb_s = e
-            la_l, lb_l, lb_s = l
-            a_l = la_l + ea_l
-            t_l = la_l + eb_l  # a_later * b_earlier (log-mag)
-            m = jnp.maximum(t_l, lb_l)
-            m_safe = jnp.where(m > -jnp.inf, m, 0.0)
-            t = eb_s * jnp.exp(t_l - m_safe) + lb_s * jnp.exp(lb_l - m_safe)
-            return (a_l, safe_log(safe_abs(t)) + m_safe, nonzero_sign(t))
-
-        b_l, b_s = safe_log(safe_abs(b)), nonzero_sign(b)
-        a_star_l, b_star_l, b_star_s = jax.lax.associative_scan(
-            combine, (log_a, b_l, b_s), axis=0
-        )
-        # h_t = A*_t · h0 + B*_t  (back in float domain: states feed matmuls)
-        states = jnp.exp(a_star_l) * h0[None] + b_star_s * jnp.exp(b_star_l)
+        # Route through the engine: auto-selects the Pallas diagonal-scan
+        # kernel on TPU, the XLA associative scan elsewhere.  Decays are
+        # log-native (sign +1); inputs/state enter through safe log.
+        a_g = Goom(log_a, jnp.ones_like(log_a))
+        b_g = Goom(safe_log(safe_abs(b)), nonzero_sign(b))
+        x0_g = Goom(safe_log(safe_abs(h0)), nonzero_sign(h0))
+        states = from_goom(engine.diagonal_scan(a_g, b_g, x0_g))
         return states, states[-1]
 
     a = jnp.exp(log_a)
@@ -217,7 +208,7 @@ def _rwkv6_scan(r, k, v, log_a, u, cfg: Rwkv6Cfg, h0=None):
             # scores over GOOMs: log r~ = log|r| + cumprev; log k~ = log|k| - cum
             rg = Goom(safe_log(safe_abs(rb)) + cum_prev, nonzero_sign(rb))
             kg = Goom(safe_log(safe_abs(kb)) - cum, nonzero_sign(kb))
-            scores_g = lmme_reference(rg, Goom(kg.log_abs, kg.sign).mT)
+            scores_g = engine.lmme(rg, Goom(kg.log_abs, kg.sign).mT)
             scores = from_goom(scores_g)              # (B,H,L,L)
             k_rem_g = Goom(safe_log(safe_abs(kb)) + (total - cum), nonzero_sign(kb))
             k_rem = from_goom(k_rem_g)

@@ -11,6 +11,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core import engine
 from ..models.model import DecoderLM
 
 
@@ -19,20 +20,29 @@ def abstract_caches(model: DecoderLM, batch: int, max_len: int):
     return jax.eval_shape(lambda: model.init_caches(batch, max_len))
 
 
-def make_prefill_step(model: DecoderLM) -> Callable:
+def make_prefill_step(model: DecoderLM, *, backend: str = "auto") -> Callable:
+    """``backend`` selects the scan-engine backend for every GOOM recurrence
+    in the model (see ``repro.core.engine``).  It is captured when the step
+    is traced, so one jitted step == one backend."""
+
     def prefill_step(params, tokens, caches, **kw):
-        return model.prefill(params, tokens, caches, **kw)
+        with engine.use_backend(backend):
+            return model.prefill(params, tokens, caches, **kw)
 
     return prefill_step
 
 
-def make_decode_step(model: DecoderLM, *, sample: str = "greedy") -> Callable:
+def make_decode_step(
+    model: DecoderLM, *, sample: str = "greedy", backend: str = "auto"
+) -> Callable:
     """decode_step(params, token (B,1), caches, index) -> (next (B,1), caches)
 
-    ``index`` is the absolute position of the incoming token (scalar)."""
+    ``index`` is the absolute position of the incoming token (scalar);
+    ``backend`` as in ``make_prefill_step``."""
 
     def decode_step(params, token, caches, index):
-        logits, caches = model.decode_step(params, token, caches, index)
+        with engine.use_backend(backend):
+            logits, caches = model.decode_step(params, token, caches, index)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return nxt, caches
 
@@ -45,15 +55,17 @@ def generate(
     prompt: jax.Array,  # (B, P)
     n_tokens: int,
     max_len: int,
+    backend: str = "auto",
     **kw,
 ) -> jax.Array:
     """Greedy generation driver (jit-per-step; for tests/examples)."""
     b, p = prompt.shape
     caches = model.init_caches(b, max_len)
-    logits, caches = model.prefill(params, prompt, caches, **kw)
+    prefill = make_prefill_step(model, backend=backend)
+    logits, caches = prefill(params, prompt, caches, **kw)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    step = jax.jit(make_decode_step(model))
+    step = jax.jit(make_decode_step(model, backend=backend))
     for i in range(n_tokens - 1):
         tok, caches = step(params, tok, caches, p + i)
         out.append(tok)

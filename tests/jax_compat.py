@@ -1,0 +1,15 @@
+"""Small cross-version JAX helpers for the test suite."""
+
+import jax
+
+
+def abstract_mesh(sizes, names):
+    """AbstractMesh across the 0.4.x → 0.5+ constructor change.
+
+    Older jax: AbstractMesh(shape_tuple=(("data", 2), ...));
+    newer jax: AbstractMesh(axis_sizes, axis_names).
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(sizes), tuple(names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))

@@ -1,0 +1,259 @@
+"""Dispatch-layer tests: engine API, backend resolution, kernel parity.
+
+Kernels run forced to ``pallas_interpret`` on CPU and are compared against
+the ``xla_reference`` backend — the same BlockSpecs drive the TPU path.
+Shapes are deliberately odd / non-block-divisible: padding and chunking are
+the dispatcher's job and must be invisible to callers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.goom import Goom, finite_floor, to_goom
+from repro.kernels import dispatch
+
+KEY = jax.random.PRNGKey(0)
+
+
+def ref_and_pallas(fn, *args):
+    with engine.use_backend("xla_reference"):
+        want = fn(*args)
+    with engine.use_backend("pallas_interpret"):
+        got = fn(*args)
+    return want, got
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+# ---------------------------------------------------------------------------
+def test_resolve_backend_table():
+    platform = jax.default_backend()
+    assert dispatch.resolve_backend("reference") == "xla_reference"
+    assert dispatch.resolve_backend("xla_reference") == "xla_reference"
+    if platform == "tpu":
+        assert dispatch.resolve_backend("auto") == "pallas_tpu"
+        assert dispatch.resolve_backend("pallas") == "pallas_tpu"
+    else:
+        assert dispatch.resolve_backend("auto") == "xla_reference"
+        assert dispatch.resolve_backend("pallas") == "pallas_interpret"
+    # f64 logs never hit the f32 kernels on auto
+    assert dispatch.resolve_backend("auto", dtype=jnp.float64) == "xla_reference"
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("mxu_go_brrr")
+
+
+def test_use_backend_scoped_and_nested():
+    base = engine.get_config().backend
+    with engine.use_backend("reference"):
+        assert engine.get_config().backend == "reference"
+        with engine.use_backend("pallas", block_t=64):
+            assert engine.get_config().backend == "pallas"
+            assert engine.get_config().block_t == 64
+        assert engine.get_config().backend == "reference"
+    assert engine.get_config().backend == base
+
+
+# ---------------------------------------------------------------------------
+# diagonal scan parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(19, 5), (8, 3, 5), (33, 1), (7,)])
+def test_diagonal_scan_parity_odd_shapes(shape):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = to_goom(jnp.exp(-jnp.abs(jax.random.normal(k1, shape))))
+    b = to_goom(jax.random.normal(k2, shape))
+    x0 = to_goom(jax.random.normal(k3, shape[1:]))
+    want, got = ref_and_pallas(engine.diagonal_scan, a, b, x0)
+    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(got.sign, want.sign)
+
+
+def test_diagonal_scan_parity_inf_zero_sentinels():
+    """Exact zeros (log = -inf) in the inputs survive the kernel path."""
+    k1, k2 = jax.random.split(KEY)
+    a = to_goom(jnp.exp(-jnp.abs(jax.random.normal(k1, (12, 4)))))
+    b_log = jax.random.normal(k2, (12, 4)).at[::3].set(-jnp.inf)
+    b = Goom(b_log, jnp.ones_like(b_log))
+    want, got = ref_and_pallas(engine.diagonal_scan, a, b, None)
+    mask = np.isfinite(np.asarray(want.log_abs))
+    np.testing.assert_allclose(np.asarray(got.log_abs)[mask],
+                               np.asarray(want.log_abs)[mask],
+                               rtol=2e-4, atol=2e-4)
+    assert np.array_equal(np.isneginf(got.log_abs), np.isneginf(want.log_abs))
+
+
+# ---------------------------------------------------------------------------
+# matrix scan parity (the fused PSCAN∘LMME kernel)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t,batch,d,m", [(13, (), 4, 1), (9, (2,), 5, 3),
+                                         (16, (2, 2), 3, 1), (5, (), 8, 8)])
+def test_matrix_scan_parity_odd_shapes(t, batch, d, m):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = to_goom(jax.random.normal(k1, (t,) + batch + (d, d)) * 0.6)
+    b = to_goom(jax.random.normal(k2, (t,) + batch + (d, m)) * 0.6)
+    x0 = to_goom(jax.random.normal(k3, batch + (d, m)))
+    want, got = ref_and_pallas(engine.matrix_scan, a, b, x0)
+    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(got.sign, want.sign)
+
+
+def test_matrix_scan_parity_no_x0_and_zero_bias():
+    k1 = jax.random.fold_in(KEY, 7)
+    a = to_goom(jax.random.normal(k1, (11, 4, 4)) * 0.5)
+    b_log = jnp.full((11, 4, 2), -jnp.inf).at[0].set(0.0)  # B_1 = 1, rest 0
+    b = Goom(b_log, jnp.ones_like(b_log))
+    want, got = ref_and_pallas(engine.matrix_scan, a, b, None)
+    mask = np.isfinite(np.asarray(want.log_abs))
+    np.testing.assert_allclose(np.asarray(got.log_abs)[mask],
+                               np.asarray(want.log_abs)[mask],
+                               rtol=1e-4, atol=1e-3)
+
+
+def _e200_inputs(signed: bool):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    t, d, m = 17, 4, 2
+    shifts = 200.0 * jax.random.choice(k4, jnp.array([-1.0, 1.0]), (t, 1, 1))
+    av = jax.random.normal(k1, (t, d, d))
+    a0 = to_goom(av if signed else jnp.abs(av) + 0.1)
+    a = Goom(a0.log_abs + shifts, a0.sign)  # per-step magnitudes e^±200
+    bv = jax.random.normal(k2, (t, d, m))
+    b = to_goom(bv if signed else jnp.abs(bv) + 0.1)
+    x0v = jax.random.normal(k3, (d, m))
+    x0 = to_goom(x0v if signed else jnp.abs(x0v) + 0.1)
+    return a, b, x0
+
+
+def test_matrix_scan_parity_ill_conditioned_e200():
+    """Acceptance bar: ≤1e-4 relative log-space error at dynamic range e±200.
+
+    Positive operands: every output is a sum of positives, so log-space
+    parity is well-posed at any dynamic range — this isolates the kernel's
+    online rescaling from cancellation conditioning (covered below)."""
+    a, b, x0 = _e200_inputs(signed=False)
+    want, got = ref_and_pallas(engine.matrix_scan, a, b, x0)
+    assert float(jnp.max(jnp.abs(want.log_abs))) > 200.0  # genuinely extreme
+    rel = np.abs(np.asarray(got.log_abs) - np.asarray(want.log_abs)) / np.maximum(
+        np.abs(np.asarray(want.log_abs)), 1.0)
+    assert float(rel.max()) <= 1e-4
+
+
+def test_matrix_scan_parity_ill_conditioned_e200_signed():
+    """Mixed signs at e±200: cancellation *inside* intermediate compounds is
+    ill-conditioned for any float method (GOOMs remove overflow, not
+    cancellation), and the kernel's padded scan tree associates differently
+    from the reference — so the bound here is 1e-3, with the strict 1e-4
+    acceptance enforced by the sign-free test above.  Values are compared
+    row-normalized (same convention as test_kernels.assert_goom_close)."""
+    a, b, x0 = _e200_inputs(signed=True)
+    want, got = ref_and_pallas(engine.matrix_scan, a, b, x0)
+    w_log, g_log = np.asarray(want.log_abs), np.asarray(got.log_abs)
+    scale = np.maximum(w_log.max(-1, keepdims=True), g_log.max(-1, keepdims=True))
+    ok = w_log > scale - 12.0  # away from catastrophic cancellation
+    rel = np.abs(g_log - w_log) / np.maximum(np.abs(w_log), 1.0)
+    assert float(rel[ok].max()) <= 1e-3
+    gv = np.asarray(got.sign) * np.exp(g_log - scale)
+    wv = np.asarray(want.sign) * np.exp(w_log - scale)
+    np.testing.assert_allclose(gv, wv, atol=1e-3, rtol=0)
+
+
+def test_matrix_scan_gradients_match_reference():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    t, d, m = 6, 3, 2
+    a = to_goom(jax.random.normal(k1, (t, d, d)) * 0.7)
+    b = to_goom(jax.random.normal(k2, (t, d, m)) * 0.7)
+    x0 = to_goom(jax.random.normal(k3, (d, m)))
+
+    def loss(al, bl):
+        out = engine.matrix_scan(Goom(al, a.sign), Goom(bl, b.sign), x0)
+        return jnp.sum(jnp.where(jnp.isfinite(out.log_abs), out.log_abs, 0.0))
+
+    with engine.use_backend("xla_reference"):
+        gr = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs)
+    with engine.use_backend("pallas_interpret"):
+        gk = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs)
+    for x, y in zip(gk, gr):
+        assert np.all(np.isfinite(x))
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# cumulative LMME + engine.lmme
+# ---------------------------------------------------------------------------
+def test_cumulative_lmme_parity():
+    mats = to_goom(jax.random.normal(KEY, (10, 3, 3)))
+    want, got = ref_and_pallas(engine.cumulative_lmme, mats)
+    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(got.sign, want.sign)
+
+
+def test_engine_lmme_parity_batched():
+    k1, k2 = jax.random.split(KEY)
+    a = to_goom(jax.random.normal(k1, (2, 3, 7, 9)))
+    b = to_goom(jax.random.normal(k2, (2, 3, 9, 5)))
+    want, got = ref_and_pallas(engine.lmme, a, b)
+    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=2e-4, atol=2e-4)
+
+
+def test_selective_reset_scan_through_engine():
+    from repro.core.scan import colinearity_select, orthonormal_reset
+
+    mats = to_goom(jax.random.normal(KEY, (16, 3, 3)) * 2.0)
+    states, flags = engine.selective_reset_scan(
+        mats, colinearity_select(0.995), orthonormal_reset())
+    assert not np.any(np.isnan(states.log_abs))
+    assert not np.any(np.isposinf(states.log_abs))
+
+
+def test_goom_ssm_scan_variants_agree_through_engine():
+    """The model's generic (engine.matrix_scan) and shared-A doubling paths
+    compute the same recurrence — on both backends."""
+    import dataclasses
+
+    from repro.models.common import KeyGen, unzip
+    from repro.models.goom_layer import GoomSSMCfg, goom_ssm_apply, goom_ssm_init
+
+    cfg_s = GoomSSMCfg(d_model=8, head_dim=4, chunk=4)
+    cfg_g = dataclasses.replace(cfg_s, scan_variant="generic")
+    params, _ = unzip(goom_ssm_init(KeyGen(jax.random.PRNGKey(3)), cfg_s))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 8))
+    ys, _ = goom_ssm_apply(params, x, cfg_s, compute_dtype=jnp.float32)
+    with engine.use_backend("xla_reference"):
+        yg, _ = goom_ssm_apply(params, x, cfg_g, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(ys, yg, rtol=2e-3, atol=2e-3)
+    with engine.use_backend("pallas_interpret"):
+        yp, _ = goom_ssm_apply(params, x, cfg_g, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(yp, yg, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+def test_finite_floor_unknown_dtype_falls_back():
+    """float16 / unknown dtypes must not KeyError: fall back to the f32 floor."""
+    f32 = finite_floor(jnp.float32)
+    assert finite_floor(jnp.float16) == f32
+    assert finite_floor(jnp.int32) == f32
+    assert finite_floor("not-a-dtype-at-all") == f32
+    assert finite_floor(jnp.float64) != f32  # real entries stay distinct
+
+
+def test_lse2_zero_zero_explicit_and_grad_safe():
+    """_lse2(0, 0) must be an exact (-inf, +1) zero, and jit'd gradients
+    through mixed zero/finite lanes must be NaN-free (previously the -inf
+    fell out of log(0) by accident and NaN'd under differentiation)."""
+    from repro.kernels.goom_scan.goom_scan import _lse2
+
+    neg_inf = jnp.float32(-jnp.inf)
+    log, sign = _lse2(neg_inf, 1.0, neg_inf, 1.0)
+    assert np.isneginf(log)
+    assert float(sign) == 1.0
+
+    def f(l1):
+        out_log, _ = _lse2(l1, jnp.ones_like(l1),
+                           jnp.full_like(l1, -jnp.inf), jnp.ones_like(l1))
+        return jnp.sum(jnp.where(jnp.isfinite(out_log), out_log, 0.0))
+
+    g = jax.jit(jax.grad(f))(jnp.array([0.5, -jnp.inf, -3.0], jnp.float32))
+    assert not np.any(np.isnan(g))

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st  # degrades gracefully w/o hypothesis
 
 from repro.core.goom import Goom, from_goom, to_goom
 from repro.core.ops import lmme_naive, lmme_reference
@@ -61,7 +61,9 @@ def test_lmme_pallas_batched(batch):
     b = to_goom(jax.random.normal(kb, batch + (24, 8)))
     got = lmme_pallas(a, b, interpret=True)
     want = lmme_naive(a, b)
-    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=2e-5, atol=2e-5)
+    # cancellation-aware: raw allclose at 2e-5 flakes on the occasional
+    # entry whose |sum| lands far below its row scale
+    assert_goom_close(got, want)
 
 
 def test_lmme_pallas_extreme_magnitudes():

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax_compat import abstract_mesh
 
 from repro.sharding.rules import make_rules
 from repro.train.checkpoint import CheckpointManager
@@ -145,7 +146,7 @@ def test_checkpoint_restore_latest_resharding(tmp_path):
 # ---------------------------------------------------------------------------
 def _mesh22():
     # AbstractMesh: axis sizes without needing real devices (1-CPU CI)
-    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_rules_divisibility_drop():
@@ -166,7 +167,7 @@ def test_rules_no_axis_reuse():
 
 
 def test_rules_multi_axis_batch():
-    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 2, 2), ("pod", "data", "model"))
     rules = make_rules(mesh)
     spec = rules.spec((8, 128), ["batch", None])
     assert spec[0] == ("pod", "data")

@@ -14,6 +14,11 @@
                     results/dryrun_baseline.json (run dryrun first).
   scan_backends   — engine dispatch sweep: diagonal + matrix GOOM scans per
                     backend (reference vs pallas), with parity checks.
+  scan_sharded    — sequence-sharded scans across the device mesh: per-
+                    shard-count timings of matrix_scan / cumulative_lmme /
+                    diagonal_scan, with single-device parity checks.  On
+                    CPU, run alone so the harness can force 8 host devices
+                    (or export XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
 
@@ -277,6 +282,59 @@ def scan_backends(backends=("reference", "pallas")):
     return out
 
 
+def scan_sharded():
+    """Sequence-sharded scans: timings per shard count + parity vs 1 device."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import engine
+    from repro.core.goom import to_goom
+
+    devs = jax.devices()
+    counts = [p for p in (1, 2, 4, 8, 16) if p <= len(devs)]
+    print(f"# scan_sharded: {len(devs)} devices; shard counts {counts}")
+    print("op,seq_shards,shape,ms")
+    t, d, m = 2048, 8, 8
+    tc, c = 8192, 256
+    key = jax.random.PRNGKey(0)
+    a = to_goom(jax.random.normal(key, (t, d, d)) * 0.5)
+    b = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, d, m)) * 0.5)
+    da = to_goom(jnp.exp(-jnp.abs(jax.random.normal(key, (tc, c)))))
+    db = to_goom(jax.random.normal(jax.random.PRNGKey(2), (tc, c)))
+
+    out = {}
+    baseline = {}
+    for p in counts:
+        mesh = Mesh(np.array(devs[:p]).reshape(1, p), ("data", "seq"))
+        with engine.use_mesh(mesh, seq_axis="seq"):
+            assert engine.active_seq_shards() == p or p == 1
+            row = {}
+            for op, fn, args, shape in [
+                ("matrix_scan", engine.matrix_scan, (a, b), f"({t}x{d}x{m})"),
+                ("cumulative_lmme", engine.cumulative_lmme, (a,),
+                 f"({t}x{d}x{d})"),
+                ("diagonal_scan", engine.diagonal_scan, (da, db),
+                 f"({tc}x{c})"),
+            ]:
+                jf = jax.jit(fn)
+                ms = _bench(jf, *args) * 1e3
+                row[op] = ms
+                print(f"{op},{p},{shape},{ms:.2f}")
+                got = np.asarray(jf(*args).log_abs)
+                if op in baseline:
+                    # smoke parity: signed data compounds over 2k steps, so
+                    # cancellation-adjacent elements reassociate at ~1e-4;
+                    # the strict 1e-5 bounds live in tests/test_sharded.py
+                    # on well-posed (positive-operand) problems.
+                    finite = np.isfinite(baseline[op])
+                    np.testing.assert_allclose(
+                        got[finite], baseline[op][finite],
+                        rtol=1e-3, atol=1e-3)
+                else:
+                    baseline[op] = got
+            out[p] = row
+    return out
+
+
 ALL = {
     "table1_range": table1_range,
     "fig1_chains": fig1_chains,
@@ -286,12 +344,11 @@ ALL = {
     "fig4_rnn": fig4_rnn,
     "roofline": roofline,
     "scan_backends": scan_backends,
+    "scan_sharded": scan_sharded,
 }
 
 
 def main() -> None:
-    from repro.core import engine
-
     ap = argparse.ArgumentParser()
     ap.add_argument("names", nargs="*", metavar="name",
                     help=f"benchmarks to run (default: all): {', '.join(ALL)}")
@@ -301,6 +358,16 @@ def main() -> None:
                          "sweeps reference+pallas by default)")
     args = ap.parse_args()
     names = args.names or list(ALL)
+    if "scan_sharded" in names and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        # Force 8 host devices for the sharded sweep.  Only effective if the
+        # jax backend has not initialized yet (i.e. scan_sharded run alone
+        # or first); otherwise the sweep covers whatever devices exist.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8")
+    from repro.core import engine
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
     results = {}
     for name in names:

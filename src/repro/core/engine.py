@@ -44,13 +44,31 @@ Overrides
 ``use_backend`` affects *tracing*: a ``jax.jit``-compiled function captures
 the backend that was active when it was first traced — construct jitted
 step functions under the backend you intend to serve with.
+
+Sharded scans
+-------------
+Every scan op also runs multi-device: batch-sharded through the usual
+``sharding.rules`` logical axes, and *sequence-sharded* via ``shard_map``
+(each device scans its time-shard locally, per-shard carries are combined
+cross-device with the LMME monoid, then stitched — see
+``repro.kernels.sharded`` and docs/engine.md).  Activation, in precedence
+order:
+
+  1. ``use_mesh(mesh, seq_axis=...)`` — explicit mesh;
+  2. active ``sharding.rules`` whose ``scan_seq`` logical axis maps to a
+     mesh axis (``scan_batch`` supplies the batch axes);
+  3. otherwise — or with ``seq_shards=1``, or a 1-sized sequence axis —
+     single-device (``seq_shards="auto"`` falls back silently; an explicit
+     shard count without a mesh raises).
+
+Like backends, the sharding context is captured at trace time.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple, Union
 
 import jax
 
@@ -60,9 +78,11 @@ from . import scan as _scan
 __all__ = [
     "EngineConfig",
     "use_backend",
+    "use_mesh",
     "set_default_backend",
     "get_config",
     "resolved_backend",
+    "active_seq_shards",
     "lmme",
     "diagonal_scan",
     "matrix_scan",
@@ -83,6 +103,11 @@ class EngineConfig:
     block_n: int = 128        # lmme tiles
     block_m: int = 128
     block_d: int = 128
+    # -- sharded scans (see module docstring) -------------------------------
+    mesh: Optional[Any] = None          # jax.sharding.Mesh; None -> rules
+    seq_axis: Optional[str] = None      # mesh axis carrying the time shards
+    batch_axis: Union[None, str, Tuple[str, ...]] = None
+    seq_shards: Union[str, int] = "auto"  # "auto" | 1 (off) | mesh axis size
 
 
 _DEFAULT = EngineConfig()
@@ -103,6 +128,29 @@ def set_default_backend(backend: str) -> None:
 def use_backend(backend: str = "auto", **overrides):
     """Scoped backend/config override (see module docstring for names)."""
     cfg = dataclasses.replace(get_config(), backend=backend, **overrides)
+    _STACK.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _STACK.pop()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, *, seq_axis: Optional[str] = None,
+             batch_axis: Union[None, str, Tuple[str, ...]] = None,
+             seq_shards: Union[str, int] = "auto", **overrides):
+    """Scoped mesh for sequence-sharded scans (see module docstring).
+
+    ``seq_axis`` defaults to the mesh axis named ``"seq"`` when present,
+    else the *last* mesh axis (the TP/SP axis on the production meshes).
+    ``mesh=None`` explicitly restores single-device scans inside the scope.
+    """
+    if mesh is not None and seq_axis is None:
+        names = tuple(mesh.axis_names)
+        seq_axis = "seq" if "seq" in names else names[-1]
+    cfg = dataclasses.replace(
+        get_config(), mesh=mesh, seq_axis=seq_axis, batch_axis=batch_axis,
+        seq_shards=1 if mesh is None else seq_shards, **overrides)
     _STACK.append(cfg)
     try:
         yield cfg
@@ -132,12 +180,67 @@ def resolved_backend(dtype=None) -> str:
     )
 
 
+def _resolved_shard():
+    """The ShardSpec the current config resolves to, or None (single-device).
+
+    Precedence: explicit ``use_mesh`` config > active ``sharding.rules``
+    (``scan_seq`` / ``scan_batch`` logical axes) > None.
+    """
+    cfg = get_config()
+    if cfg.seq_shards == 1:
+        return None
+    mesh, seq_axis, batch_axis = cfg.mesh, cfg.seq_axis, cfg.batch_axis
+    if mesh is None:
+        from repro.sharding import rules as _rules
+
+        active = _rules.current_rules()
+        if active is not None:
+            seq = active.mesh_axes_for("scan_seq")
+            if seq:
+                mesh = active.mesh
+                seq_axis = seq[0]
+                if batch_axis is None:
+                    batch_axis = active.mesh_axes_for("scan_batch")
+    if mesh is None or seq_axis is None:
+        if isinstance(cfg.seq_shards, int) and cfg.seq_shards > 1:
+            raise ValueError(
+                f"seq_shards={cfg.seq_shards} requested but no mesh is "
+                "active (use engine.use_mesh or sharding rules with a "
+                "scan_seq mapping)")
+        return None
+    from repro.kernels.sharded import ShardSpec
+
+    n = int(mesh.shape[seq_axis])
+    if cfg.seq_shards not in ("auto", n):
+        raise ValueError(
+            f"seq_shards={cfg.seq_shards} does not match mesh axis "
+            f"{seq_axis!r} of size {n}")
+    if n == 1:
+        return None
+    if isinstance(batch_axis, str):
+        batch_axes: Tuple[str, ...] = (batch_axis,)
+    else:
+        batch_axes = tuple(batch_axis or ())
+    return ShardSpec(mesh, seq_axis, batch_axes)
+
+
+def active_seq_shards() -> int:
+    """How many sequence shards the current config resolves to (1 = local).
+
+    Model code uses this to pick scan layouts — e.g. handing the engine one
+    full-length scan (shardable) instead of a sequential loop over chunks.
+    """
+    shard = _resolved_shard()
+    return 1 if shard is None else shard.n_shards
+
+
 def _impl(op: str, dtype) -> Callable:
     from repro.kernels import dispatch
 
     cfg = get_config()
     resolved = dispatch.resolve_backend(cfg.backend, dtype=dtype)
-    return dispatch.get_impl(op, resolved, _blocks(cfg))
+    return dispatch.get_impl(op, resolved, _blocks(cfg),
+                             shard=_resolved_shard())
 
 
 # ---------------------------------------------------------------------------
@@ -174,10 +277,30 @@ def selective_reset_scan(
 
     The reset combine is data-dependent control flow that XLA's associative
     scan already handles; the engine routes its inner matrix products to the
-    backend-selected LMME, which is where the flops are.
+    backend-selected LMME, which is where the flops are.  Under an active
+    mesh the whole associative scan is sequence-sharded (the reset combine
+    rides the same shard decomposition); note the reset *positions* are
+    bracketing-dependent — the select condition inspects interim compounds,
+    and the sharded tree materializes different ones — so sharded and local
+    runs are equivalent selective-reset trajectories, not bit-identical
+    (single-device scans already have this property across tree shapes).
+    Lengths that don't divide the shard count fall back to the local scan —
+    the reset monoid has no identity element to pad with.
     """
+    shard = _resolved_shard()
+    if shard is not None and a.shape[0] % shard.n_shards == 0 \
+            and a.shape[0] >= shard.n_shards:
+        from repro.kernels import sharded as _sharded
+
+        def assoc(fn, elems, axis=0, _spec=shard):
+            assert axis == 0, axis
+            return _sharded.seq_sharded_associative_scan(fn, elems, spec=_spec)
+    else:
+        assoc = jax.lax.associative_scan
+
     return _scan.selective_reset_scan(
         a, select_fn, reset_fn,
         matmul=_impl("lmme", a.dtype),
         reset_only_state_compounds=reset_only_state_compounds,
+        assoc_scan=assoc,
     )

@@ -192,12 +192,13 @@ def spectrum_parallel(
     T: an interior scan compound spanning k steps has condition ~e^(Δλ·k·dt),
     so the sub-dominant directions cancel below float precision near the top
     of the scan tree — GOOMs remove overflow, not cancellation (see
-    DESIGN.md).  With ``chunk_size=K`` we run the O(log K) parallel scan
-    inside chunks (bounded condition) and carry the orthonormal basis
+    docs/DESIGN.md).  With ``chunk_size=K`` we run the O(log K) parallel
+    scan inside chunks (bounded condition) and carry the orthonormal basis
     sequentially across the T/K chunk boundaries — numerically equivalent
     to the sequential method while keeping K-way time-parallelism, which is
     what saturates the accelerator anyway (paper Fig. 3 tapers at 1e5 steps
-    for exactly that reason).
+    for exactly that reason).  Lengths that don't divide ``chunk_size`` are
+    padded with identity Jacobians and masked out of the mean.
     """
     t, d = jacobians.shape[0], jacobians.shape[-1]
     select = colinearity_select(colinearity_threshold)
@@ -219,9 +220,16 @@ def spectrum_parallel(
         logs = jnp.log(jnp.abs(jnp.diagonal(r, axis1=-2, axis2=-1)))
         return jnp.mean(logs, axis=0) / dt
 
-    if t % chunk_size:
-        raise ValueError(f"n_steps={t} not divisible by chunk_size={chunk_size}")
-    js_c = jacobians.reshape(t // chunk_size, chunk_size, d, d)
+    # Pad the trailing partial chunk with identity Jacobians: the identity
+    # neither rotates nor scales the carried basis (log|diag R| = 0 exactly),
+    # and the padded positions are masked out of the mean below — so callers
+    # never have to pre-round trajectory lengths to the chunk size.
+    pad = (-t) % chunk_size
+    if pad:
+        eye = jnp.broadcast_to(jnp.eye(d, dtype=jacobians.dtype), (pad, d, d))
+        jacobians = jnp.concatenate([jacobians, eye], axis=0)
+    valid = (jnp.arange(t + pad) < t).reshape(-1, chunk_size)
+    js_c = jacobians.reshape((t + pad) // chunk_size, chunk_size, d, d)
 
     def chunk_step(q_in, js_k):
         x0 = js_k[0] @ q_in
@@ -236,7 +244,8 @@ def spectrum_parallel(
         return q[-1], logs
 
     _, logs = jax.lax.scan(chunk_step, jnp.eye(d, dtype=jacobians.dtype), js_c)
-    return jnp.mean(logs, axis=(0, 1)) / dt
+    masked = jnp.where(valid[..., None], logs, 0.0)
+    return jnp.sum(masked, axis=(0, 1)) / t / dt
 
 
 def lle_parallel(jacobians: jax.Array, dt: float) -> jax.Array:

@@ -150,6 +150,7 @@ def selective_reset_scan(
     *,
     matmul: Callable[[Goom, Goom], Goom] = lmme_reference,
     reset_only_state_compounds: bool = True,
+    assoc_scan: Callable = jax.lax.associative_scan,
 ) -> Tuple[Goom, jax.Array]:
     """Prefix scan of X_t = A_t X_{t-1} with conditional resets (paper §5).
 
@@ -169,6 +170,10 @@ def selective_reset_scan(
     values carry the exponents; orthonormalizing those would erase them.
     The paper's prose ("reset interim deviation *states*", §4.2.1a) implies
     this gate; eq. 28 alone does not spell it out.
+
+    ``assoc_scan`` is internal plumbing for the engine: the combine below is
+    associative, so the engine may substitute a sequence-sharded associative
+    scan (``repro.kernels.sharded``) without touching the reset semantics.
     """
     zeros = goom_zeros(a.shape, a.dtype)
 
@@ -208,7 +213,7 @@ def selective_reset_scan(
         jnp.zeros(a.shape[:-2], bool),
         contains_x0,
     )
-    out = jax.lax.associative_scan(combine, init, axis=0)
+    out = assoc_scan(combine, init, axis=0)
     states = goom_add(
         Goom(out.a_log, out.a_sign), Goom(out.b_log, out.b_sign)
     )

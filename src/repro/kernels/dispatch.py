@@ -190,6 +190,40 @@ _IMPLS = {
 }
 
 
-def get_impl(op: str, resolved: str, blocks: dict):
-    """Return the callable implementing ``op`` on the resolved backend."""
-    return _IMPLS[op](resolved, blocks)
+def get_impl(op: str, resolved: str, blocks: dict, shard=None):
+    """Return the callable implementing ``op`` on the resolved backend.
+
+    ``shard`` (a ``repro.kernels.sharded.ShardSpec`` or None) selects the
+    sequence-sharded multi-device path: the local implementation above runs
+    per device inside ``shard_map``, with a cross-shard LMME-monoid carry
+    combine stitching the time shards together.  ``lmme`` itself is not a
+    scan, so it ignores ``shard`` (it is already local inside shard bodies).
+    """
+    base = _IMPLS[op](resolved, blocks)
+    if shard is None or op == "lmme":
+        return base
+    from . import sharded  # lazy: keeps single-device imports collective-free
+
+    if op == "diagonal_scan":
+        def f(a, b, x0=None):
+            return sharded.seq_sharded_diagonal_scan(
+                a, b, x0, spec=shard, local_diagonal_scan=base)
+
+        return f
+    lmme_impl = _lmme(resolved, blocks)
+    if op == "matrix_scan":
+        cum = _cumulative_lmme(resolved, blocks)
+
+        def f(a, b, x0=None):
+            return sharded.seq_sharded_matrix_scan(
+                a, b, x0, spec=shard, local_matrix_scan=base,
+                local_cumulative_lmme=cum, lmme=lmme_impl)
+
+        return f
+    assert op == "cumulative_lmme", op
+
+    def f(a):
+        return sharded.seq_sharded_cumulative_lmme(
+            a, spec=shard, local_cumulative_lmme=base, lmme=lmme_impl)
+
+    return f

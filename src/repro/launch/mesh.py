@@ -24,7 +24,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist, as a 1-D data mesh (CPU smoke/examples)."""
+def make_host_mesh(*, seq_shards: int = 1):
+    """Whatever devices exist, as a ("data", "model") mesh (CPU smoke).
+
+    ``seq_shards > 1`` sizes the "model" axis to carry sequence-sharded
+    GOOM scans (the ``scan_seq`` logical axis maps there): the mesh becomes
+    (n // seq_shards, seq_shards).  The device count must divide evenly.
+    """
     n = len(jax.devices())
+    if seq_shards > 1:
+        if n % seq_shards:
+            raise ValueError(
+                f"--seq-shards {seq_shards} does not divide {n} devices")
+        return jax.make_mesh((n // seq_shards, seq_shards), ("data", "model"))
     return jax.make_mesh((n, 1), ("data", "model"))

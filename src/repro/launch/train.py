@@ -64,16 +64,29 @@ def main(argv=None):
                     choices=["auto", "pallas", "reference"],
                     help="scan-engine backend for all GOOM recurrences "
                          "(repro.core.engine; auto = Pallas kernels on TPU)")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence-shard GOOM scans over the 'model' mesh "
+                         "axis (maps the scan_seq logical axis there; the "
+                         "host mesh is reshaped to (ndev/N, N)); 1 = off")
     ap.add_argument("--grad-compression", default=None, choices=[None, "int8"])
     ap.add_argument("--straggler-factor", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     if args.mesh == "host":
-        mesh = make_host_mesh()
+        mesh = make_host_mesh(seq_shards=args.seq_shards)
     else:
         mesh = make_production_mesh(multi_pod=args.mesh.endswith("multipod"))
-    rules = make_rules(mesh)
+        if args.seq_shards > 1 and mesh.shape["model"] != args.seq_shards:
+            raise ValueError(
+                f"--seq-shards {args.seq_shards} must equal the production "
+                f"mesh 'model' axis ({mesh.shape['model']})")
+    # scan_seq -> "model" turns on sequence-sharded GOOM scans inside the
+    # train step (the engine reads the active rules; see core/engine.py).
+    rules = make_rules(
+        mesh,
+        overrides={"scan_seq": "model"} if args.seq_shards > 1 else None,
+    )
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = DecoderLM(cfg)

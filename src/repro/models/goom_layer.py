@@ -225,7 +225,11 @@ def goom_ssm_apply(
     if state is not None:
         x0 = Goom(state["x_log"], state["x_sign"])
 
-    scan_fn = (_goom_ssm_scan_shared_a if cfg.scan_variant == "shared_a"
+    # The shared-A doubling variant is a host-side loop of LMMEs — inherently
+    # local.  Under an active engine mesh, route through engine.matrix_scan,
+    # which sequence-shards the full-length scan across devices.
+    scan_fn = (_goom_ssm_scan_shared_a
+               if cfg.scan_variant == "shared_a" and engine.active_seq_shards() == 1
                else _goom_ssm_scan)
     states, final = scan_fn(a_g, bu, x0, cfg.chunk)
 

@@ -360,7 +360,14 @@ def mamba_apply(
     # the state tensor are only ever materialized per chunk: the scan
     # carries (dt, x, B, C) slices — (B,L,di)/(B,L,n) — and expands to
     # (B,L,di,n) transiently inside the chunk body.
-    L = min(cfg.chunk, s)
+    # Under an active engine mesh the sequential chunk loop would serialize
+    # the devices, so hand the engine ONE full-length scan instead: the
+    # (B,S,di,n) tensors are then materialized sequence-sharded (S/P per
+    # device) and the scan runs time-parallel across the mesh.  Only the
+    # goom path routes through the engine — the float baseline scans
+    # locally, so it keeps the memory-bounding chunk loop.
+    full_seq = cfg.scan_impl == "goom" and engine.active_seq_shards() > 1
+    L = s if full_seq else min(cfg.chunk, s)
     assert s % L == 0
     nc = s // L
     dtx = (dt * xc.astype(jnp.float32))  # (B,S,di)

@@ -20,28 +20,46 @@ def abstract_caches(model: DecoderLM, batch: int, max_len: int):
     return jax.eval_shape(lambda: model.init_caches(batch, max_len))
 
 
-def make_prefill_step(model: DecoderLM, *, backend: str = "auto") -> Callable:
+def _engine_scope(backend: str, mesh, seq_shards):
+    if mesh is None:
+        # forward seq_shards so an explicit count with no mesh raises in
+        # the engine instead of silently serving single-device
+        return engine.use_backend(backend, seq_shards=seq_shards)
+    return engine.use_mesh(mesh, seq_shards=seq_shards, backend=backend)
+
+
+def make_prefill_step(
+    model: DecoderLM, *, backend: str = "auto", mesh=None,
+    seq_shards="auto",
+) -> Callable:
     """``backend`` selects the scan-engine backend for every GOOM recurrence
     in the model (see ``repro.core.engine``).  It is captured when the step
-    is traced, so one jitted step == one backend."""
+    is traced, so one jitted step == one backend.
+
+    ``mesh`` (optional ``jax.sharding.Mesh``) sequence-shards the prompt's
+    GOOM scans across devices (``engine.use_mesh``): long-context prefill is
+    the serving path where a single chip's memory ceiling bites first."""
 
     def prefill_step(params, tokens, caches, **kw):
-        with engine.use_backend(backend):
+        with _engine_scope(backend, mesh, seq_shards):
             return model.prefill(params, tokens, caches, **kw)
 
     return prefill_step
 
 
 def make_decode_step(
-    model: DecoderLM, *, sample: str = "greedy", backend: str = "auto"
+    model: DecoderLM, *, sample: str = "greedy", backend: str = "auto",
+    mesh=None, seq_shards="auto",
 ) -> Callable:
     """decode_step(params, token (B,1), caches, index) -> (next (B,1), caches)
 
     ``index`` is the absolute position of the incoming token (scalar);
-    ``backend`` as in ``make_prefill_step``."""
+    ``backend``/``mesh`` as in ``make_prefill_step`` (decode scans are
+    length-1, so the sharded path falls back to local compute per device —
+    the knob exists so one serving config drives both steps)."""
 
     def decode_step(params, token, caches, index):
-        with engine.use_backend(backend):
+        with _engine_scope(backend, mesh, seq_shards):
             logits, caches = model.decode_step(params, token, caches, index)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return nxt, caches
@@ -56,16 +74,20 @@ def generate(
     n_tokens: int,
     max_len: int,
     backend: str = "auto",
+    mesh=None,
+    seq_shards="auto",
     **kw,
 ) -> jax.Array:
     """Greedy generation driver (jit-per-step; for tests/examples)."""
     b, p = prompt.shape
     caches = model.init_caches(b, max_len)
-    prefill = make_prefill_step(model, backend=backend)
+    prefill = make_prefill_step(model, backend=backend, mesh=mesh,
+                                seq_shards=seq_shards)
     logits, caches = prefill(params, prompt, caches, **kw)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    step = jax.jit(make_decode_step(model, backend=backend))
+    step = jax.jit(make_decode_step(model, backend=backend, mesh=mesh,
+                                    seq_shards=seq_shards))
     for i in range(n_tokens - 1):
         tok, caches = step(params, tok, caches, p + i)
         out.append(tok)

@@ -122,6 +122,11 @@ def _base_table(batch_axes: Tuple[str, ...]) -> Dict[str, MeshAxes]:
         "act_expert": "data",         # EP: dispatched tokens live on data axis
         "cache_seq": None,            # decode KV cache seq (context parallel
                                       # opt-in: "data" for long_500k)
+        # -- scan engine ----------------------------------------------------
+        "scan_seq": None,             # sequence-sharded GOOM scans (opt-in:
+                                      # set to a mesh axis, e.g. "model"; the
+                                      # engine picks this up via current_rules)
+        "scan_batch": batch_axes,     # batch dim of sharded scans rides DP
         # -- parameters -----------------------------------------------------
         "embed": "data",              # FSDP shard of the d_model dim
         "vocab": "model",             # TP shard of embedding / lm head

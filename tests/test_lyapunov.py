@@ -65,7 +65,7 @@ def test_parallel_matches_sequential(jacs, name):
 @pytest.mark.parametrize("name", ["logistic", "henon", "lorenz63"])
 def test_paper_literal_mode_recovers_lambda1(jacs, name):
     """Single O(log T) scan (paper-literal): the dominant exponent is exact;
-    sub-dominant ones smear at T=4096 (float cancellation — see DESIGN.md)."""
+    sub-dominant ones smear at T=4096 (float cancellation — docs/DESIGN.md)."""
     sys = SYSTEMS[name]
     seq = spectrum_sequential(jacs[name], sys.dt)
     par = spectrum_parallel(jacs[name], sys.dt, chunk_size=None)
@@ -86,3 +86,21 @@ def test_parallel_handles_unstable_products(jacs):
     sys = SYSTEMS["lorenz63"]
     par = spectrum_parallel(jacs["lorenz63"], sys.dt)
     assert np.all(np.isfinite(np.asarray(par)))
+
+
+def test_non_divisible_length_is_padded_not_rejected():
+    """n_steps % chunk_size != 0 used to raise; now the trailing chunk is
+    padded with identity Jacobians and masked out of the mean, so the
+    estimate matches the divisible-length one on the shared prefix."""
+    d = jnp.array([2.0, 0.5, 0.1])
+    jacobians = jnp.broadcast_to(jnp.diag(d), (300, 3, 3))
+    got = spectrum_parallel(jacobians, 1.0, chunk_size=128)  # 300 = 2*128 + 44
+    np.testing.assert_allclose(got, jnp.log(d), rtol=1e-3, atol=1e-3)
+
+
+def test_padded_and_exact_chunking_agree_on_chaotic_system(jacs):
+    sys = SYSTEMS["lorenz63"]
+    js = jacs["lorenz63"][:4000]  # 4000 = 31*128 + 32: trailing partial chunk
+    par = spectrum_parallel(js, sys.dt, chunk_size=128)
+    seq = spectrum_sequential(js, sys.dt)
+    np.testing.assert_allclose(par, seq, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Docs consistency checks (the CI `docs` job; no third-party deps).
+
+1. Every relative markdown link in docs/*.md and README.md resolves to an
+   existing file (anchors are stripped; external schemes are skipped).
+2. Every `docs/<name>.md` path mentioned in source docstrings/comments
+   (src/**/*.py, tests/**/*.py, benchmarks/**/*.py) exists — e.g. the
+   DESIGN.md reference in core/lyapunov.py.
+3. The required docs exist at all.
+
+Exit status is nonzero on any failure, with a per-finding report.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REQUIRED = ["docs/DESIGN.md", "docs/engine.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+DOCREF_RE = re.compile(r"docs/[\w.-]+\.md")
+
+
+def check_links(md: pathlib.Path, errors: list) -> None:
+    for m in LINK_RE.finditer(md.read_text()):
+        target = m.group(1).split("#")[0]
+        if not target or "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {m.group(1)}")
+
+
+def check_source_docrefs(errors: list) -> None:
+    for sub in ("src", "tests", "benchmarks"):
+        for py in (ROOT / sub).rglob("*.py"):
+            for ref in set(DOCREF_RE.findall(py.read_text())):
+                if not (ROOT / ref).exists():
+                    errors.append(
+                        f"{py.relative_to(ROOT)}: references missing {ref}")
+
+
+def main() -> int:
+    errors: list = []
+    for rel in REQUIRED:
+        if not (ROOT / rel).exists():
+            errors.append(f"missing required doc: {rel}")
+    md_files = sorted((ROOT / "docs").glob("*.md")) + [ROOT / "README.md"]
+    for md in md_files:
+        if md.exists():
+            check_links(md, errors)
+    check_source_docrefs(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_docs: OK ({len(md_files)} markdown files, "
+          f"{len(REQUIRED)} required docs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

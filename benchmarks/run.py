@@ -19,13 +19,18 @@
                     diagonal_scan, with single-device parity checks.  On
                     CPU, run alone so the harness can force 8 host devices
                     (or export XLA_FLAGS=--xla_force_host_platform_device_count=8).
+  serve_throughput — continuous-batching serve engine vs the legacy
+                    static-batch path: requests/s both ways plus p50/p99
+                    decode-step latency (``--preset smoke`` for CI shapes).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
+       [--preset {full,smoke}]
 
 ``--backend {reference,pallas,auto}`` (repeatable) selects the scan-engine
 backend.  ``scan_backends`` sweeps every requested backend (default: both
 ``reference`` and ``pallas``); all other benchmarks run under the first
-requested backend (default ``auto``).
+requested backend (default ``auto``).  ``--preset smoke`` shrinks the
+serving benchmark to CI size.
 """
 
 from __future__ import annotations
@@ -335,6 +340,108 @@ def scan_sharded():
     return out
 
 
+def serve_throughput(preset: str = "full", backend: str = "auto"):
+    """Continuous-batching engine vs the legacy static-batch serve path.
+
+    Same request mix both ways: the legacy path prefills whole waves of
+    ``max_slots`` prompts in lockstep and decodes every wave to its
+    *longest* request; the engine admits requests into slots as they
+    free up.  Reports requests/s for both and p50/p99 decode-step (per-
+    token) latency for the engine.  ``--preset smoke`` shrinks everything
+    to CI size; timings are informational (no assertions — CI machines
+    jitter), the parity suite lives in tests/test_serve_engine.py.
+    """
+    from repro.configs import get_config
+    from repro.models.common import unzip
+    from repro.models.model import DecoderLM
+    from repro.serve import Engine, Request, slot_cache_bytes
+    from repro.serve.steps import generate
+
+    smoke = preset == "smoke"
+    arch = "goom-rnn-124m"  # the paper's model: every layer a GOOM scan
+    cfg = get_config(arch, smoke=True)
+    model = DecoderLM(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+
+    # short prompts, long high-variance generations: the chat-serving
+    # profile continuous batching exists for — a static wave decodes every
+    # member to the wave maximum, the engine refills freed slots instead
+    if smoke:
+        n_req, p_len, max_slots, chunk = 4, 4, 2, 4
+        gens = [3 if i % 2 == 0 else 48 for i in range(n_req)]
+    else:
+        n_req, p_len, max_slots, chunk = 12, 8, 4, 8
+        gens = [4 + (i % 4) * 28 for i in range(n_req)]       # 4..88
+    page_len = p_len + max(gens)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (n_req, p_len), 0, cfg.vocab)
+
+    sb = slot_cache_bytes(model, max_slots, page_len)
+    print(f"# serve_throughput[{preset}]: {arch}(smoke), {n_req} requests, "
+          f"prompt {p_len}, gen {min(gens)}..{max(gens)}, "
+          f"{max_slots} slots x page {page_len} "
+          f"({sb['per_slot']/2**10:.1f} KiB/slot)")
+
+    # -- legacy static batching: waves of max_slots, lockstep to the max --
+    def legacy_pass():
+        done = 0
+        for w0 in range(0, n_req, max_slots):
+            wave = list(range(w0, min(w0 + max_slots, n_req)))
+            toks = generate(model, params, prompts[jnp.asarray(wave)],
+                            n_tokens=max(gens[i] for i in wave),
+                            max_len=page_len, backend=backend)
+            jax.block_until_ready(toks)
+            done += len(wave)
+        return done
+
+    legacy_pass()  # warm the cached jitted steps
+    t0 = time.perf_counter()
+    legacy_pass()
+    t_legacy = time.perf_counter() - t0
+
+    # -- continuous batching engine --------------------------------------
+    def engine_pass(eng):
+        for i in range(n_req):
+            eng.submit(Request(uid=i, prompt=list(map(int, prompts[i])),
+                               max_new_tokens=gens[i]))
+        lats = []
+        while eng.has_work:
+            s0 = time.perf_counter()
+            eng.step()
+            lats.append(time.perf_counter() - s0)
+        return lats
+
+    eng = Engine(model, params, max_slots=max_slots, page_len=page_len,
+                 chunk=chunk, backend=backend)
+    engine_pass(eng)  # warm the persistent executables
+    eng.run()         # drain warm-pass results through the public API
+    t0 = time.perf_counter()
+    lats = engine_pass(eng)
+    t_engine = time.perf_counter() - t0
+    results = eng.run()
+    assert sorted(results) == list(range(n_req))
+    # no EOS in this workload: every request must generate its full budget
+    assert all(len(results[i]) == gens[i] for i in range(n_req))
+
+    lat = np.sort(np.asarray(lats))
+    p50 = float(lat[len(lat) // 2]) * 1e3
+    p99 = float(lat[min(len(lat) - 1, int(len(lat) * 0.99))]) * 1e3
+    out = {
+        "legacy_rps": n_req / t_legacy,
+        "engine_rps": n_req / t_engine,
+        "speedup": t_legacy / t_engine,
+        "p50_step_ms": p50,
+        "p99_step_ms": p99,
+        "per_slot_bytes": sb["per_slot"],
+    }
+    print("path,requests_per_s,total_s")
+    print(f"legacy_static,{out['legacy_rps']:.2f},{t_legacy:.2f}")
+    print(f"engine,{out['engine_rps']:.2f},{t_engine:.2f}")
+    print(f"engine decode-step latency: p50 {p50:.1f} ms, p99 {p99:.1f} ms")
+    print(f"speedup (legacy/engine): {out['speedup']:.2f}x")
+    return out
+
+
 ALL = {
     "table1_range": table1_range,
     "fig1_chains": fig1_chains,
@@ -345,6 +452,7 @@ ALL = {
     "roofline": roofline,
     "scan_backends": scan_backends,
     "scan_sharded": scan_sharded,
+    "serve_throughput": serve_throughput,
 }
 
 
@@ -356,6 +464,8 @@ def main() -> None:
                     choices=["reference", "pallas", "auto"],
                     help="scan-engine backend; repeat to sweep (scan_backends "
                          "sweeps reference+pallas by default)")
+    ap.add_argument("--preset", choices=["full", "smoke"], default="full",
+                    help="serve_throughput problem size (smoke = CI shapes)")
     args = ap.parse_args()
     names = args.names or list(ALL)
     if "scan_sharded" in names and "xla_force_host_platform_device_count" \
@@ -376,6 +486,9 @@ def main() -> None:
         if name == "scan_backends":
             results[name] = scan_backends(
                 tuple(args.backend or ("reference", "pallas")))
+        elif name == "serve_throughput":
+            results[name] = serve_throughput(
+                args.preset, (args.backend or ["auto"])[0])
         else:
             with engine.use_backend((args.backend or ["auto"])[0]):
                 results[name] = ALL[name]()

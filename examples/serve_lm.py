@@ -1,29 +1,32 @@
-"""Batched serving: prefill a batch of prompts, decode greedily.
+"""Serving demo: the continuous-batching engine, then the legacy path.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --tokens 32
 
-Uses the same prefill/decode steps the decode_32k / long_500k dry-run cells
-lower for the production mesh; here they run on host devices with a small
-config.  Demonstrates: KV-cache allocation, single-shot prefill, rolling
-decode, per-sequence streams.
+Part 1 drives ``repro.serve.Engine``: requests with different prompt and
+generation lengths are admitted into slots mid-flight (chunked prefill →
+slot write → shared decode step), finished sequences release their slots
+to waiting requests.  Part 2 runs the legacy lockstep static batch
+(``serve.steps.generate``) for comparison — the path the decode_32k /
+long_500k dry-run cells lower for the production mesh.
 """
 
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.common import unzip
 from repro.models.model import DecoderLM
-from repro.serve.steps import make_decode_step
+from repro.serve import Engine, Request, generate, slot_cache_bytes
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     args = ap.parse_args()
@@ -32,32 +35,49 @@ def main():
     model = DecoderLM(cfg)
     params, _ = unzip(model.init(jax.random.PRNGKey(0)))
 
-    b, p = args.batch, args.prompt_len
-    max_len = p + args.tokens
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0, cfg.vocab)
+    page_len = args.prompt_len + args.tokens
+    sb = slot_cache_bytes(model, args.slots, page_len)
+    print(f"== continuous batching: {args.requests} requests on "
+          f"{args.slots} slots x page {page_len} "
+          f"({sb['per_slot']/2**10:.0f} KiB/slot)")
 
-    caches = model.init_caches(b, max_len)
+    eng = Engine(model, params, max_slots=args.slots, page_len=page_len,
+                 chunk=args.chunk)
+    for i in range(args.requests):
+        # staggered workload: prompts and budgets vary per request
+        p = args.prompt_len - (i % 3)
+        n = max(2, args.tokens - 4 * i)
+        prompt = jax.random.randint(jax.random.PRNGKey(i), (p,), 0, cfg.vocab)
+        eng.submit(Request(uid=i, prompt=list(map(int, prompt)),
+                           max_new_tokens=n))
     t0 = time.perf_counter()
-    logits, caches = jax.jit(model.prefill)(params, prompts, caches)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {b} x {p} tokens in {t_prefill*1e3:.0f} ms "
-          f"({b*p/t_prefill:.0f} tok/s)")
+    steps = 0
+    results = {}
+    while eng.has_work:
+        for uid in eng.step():
+            results[uid] = eng.result(uid)
+            print(f"  step {steps:3d}: request {uid} finished "
+                  f"({len(results[uid])} tokens), "
+                  f"{eng.n_active} active / {eng.n_waiting} waiting")
+        steps += 1
+    t_eng = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    print(f"engine: {n_tok} tokens over {steps} steps in {t_eng*1e3:.0f} ms "
+          f"({n_tok/t_eng:.0f} tok/s)")
+    for i in sorted(results):
+        print(f"  req {i}: {results[i][:10]}{' ...' if len(results[i]) > 10 else ''}")
 
-    step = jax.jit(make_decode_step(model))
-    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
-    out = [tok]
+    print(f"\n== legacy lockstep batch: {args.requests} x {args.tokens} tokens")
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(99), (args.requests, args.prompt_len), 0, cfg.vocab)
     t0 = time.perf_counter()
-    for i in range(args.tokens - 1):
-        tok, caches = step(params, tok, caches, p + i)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.perf_counter() - t0
-    seqs = jnp.concatenate(out, axis=1)
-    print(f"decode:  {args.tokens-1} steps in {t_dec*1e3:.0f} ms "
-          f"({b*(args.tokens-1)/t_dec:.0f} tok/s incl. per-step dispatch)")
-    for i in range(b):
-        print(f"  seq {i}: {list(map(int, seqs[i][:16]))} ...")
+    seqs = generate(model, params, prompts, n_tokens=args.tokens,
+                    max_len=page_len)
+    jax.block_until_ready(seqs)
+    t_leg = time.perf_counter() - t0
+    n_tok = args.requests * args.tokens
+    print(f"legacy: {n_tok} tokens in {t_leg*1e3:.0f} ms "
+          f"({n_tok/t_leg:.0f} tok/s; every sequence decodes to the max)")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ Public ops
   ``lmme(a, b)``                     log-matmul-exp (paper eq. 9)
   ``diagonal_scan(a, b, x0)``        x_t = a_t ⊙ x_{t-1} ⊕ b_t
   ``matrix_scan(a, b, x0)``          X_t = A_t X_{t-1} ⊕ B_t   (fused kernel)
+  ``diagonal_scan_carry(...)`` /     stateful (states, carry) variants for
+  ``matrix_scan_carry(...)``         chunked ingestion (serving prefill)
   ``cumulative_lmme(a)``             PSCAN(LMME): A_t ··· A_1  (paper eq. 24)
   ``selective_reset_scan(...)``      paper §5, with the engine's LMME inside
 
@@ -85,7 +87,9 @@ __all__ = [
     "active_seq_shards",
     "lmme",
     "diagonal_scan",
+    "diagonal_scan_carry",
     "matrix_scan",
+    "matrix_scan_carry",
     "cumulative_lmme",
     "selective_reset_scan",
 ]
@@ -259,6 +263,33 @@ def diagonal_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
 def matrix_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
     """All states of X_t = A_t X_{t-1} ⊕ B_t (fused PSCAN∘LMME on Pallas)."""
     return _impl("matrix_scan", a.dtype)(a, b, x0)
+
+
+def _carry_out(states: Goom) -> Tuple[Goom, Goom]:
+    return states, states[-1]
+
+
+def diagonal_scan_carry(
+    a: Goom, b: Goom, x0: Optional[Goom] = None
+) -> Tuple[Goom, Goom]:
+    """Carry-in/carry-out diagonal scan: ``(states, final_state)``.
+
+    The stateful form of :func:`diagonal_scan` for chunked ingestion
+    (serving prefill, streaming): feed a chunk with the previous chunk's
+    carry as ``x0`` and thread the returned carry into the next call —
+    the concatenated chunk states equal one full-length scan, because the
+    recurrence algebra folds ``x0`` exactly (see ``core.scan``)."""
+    return _carry_out(diagonal_scan(a, b, x0))
+
+
+def matrix_scan_carry(
+    a: Goom, b: Goom, x0: Optional[Goom] = None
+) -> Tuple[Goom, Goom]:
+    """Carry-in/carry-out matrix scan: ``(states, final_state)``.
+
+    Chunked-ingestion form of :func:`matrix_scan` — same carry-threading
+    contract as :func:`diagonal_scan_carry`."""
+    return _carry_out(matrix_scan(a, b, x0))
 
 
 def cumulative_lmme(a: Goom) -> Goom:

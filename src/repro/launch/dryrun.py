@@ -78,7 +78,7 @@ _CACHE_AXES = [
     # (path substring, logical names for trailing dims)
     ("attn.k", ("batch", "cache_seq", "kv_cache_heads", None)),
     ("attn.v", ("batch", "cache_seq", "kv_cache_heads", None)),
-    ("index", ()),
+    ("index", ("batch",)),  # per-slot (B,) position vector
     ("wkv", ("batch", "act_heads", None, None)),
     ("x_prev", ("batch", None, "act_embed")),
     ("cm_x_prev", ("batch", None, "act_embed")),
@@ -218,7 +218,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, verbose=True,
             b_shard = batch_shardings(rules, batch_abs)
             caches_abs = abstract_caches(model, shape.global_batch, shape.seq_len)
             c_shard = cache_shardings(rules, caches_abs)
-            step = make_prefill_step(model)
+            step = make_prefill_step(model, fresh_caches=True)
 
             def prefill(params, tokens, caches, extra):
                 return step(params, tokens, caches, **extra)
@@ -284,6 +284,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, verbose=True,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # newer jax: one dict per computation
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     # trip-count-aware costs walked from the compiled HLO graph (XLA's own
     # cost_analysis counts while bodies once — useless for scanned layers)
@@ -380,6 +382,27 @@ def _pick_microbatches(cfg, shape, mesh) -> int:
     return mb
 
 
+def serve_cache_report(archs, max_slots: int, page_len: int):
+    """Cost serving configs from shapes alone (no allocation, no compile).
+
+    Per arch: bytes of the slot-managed decode state at (max_slots,
+    page_len) — split into KV pages (scales with page_len) vs fixed-size
+    recurrent state — via ``serve.abstract_slot_caches``/``jax.eval_shape``.
+    """
+    from repro.serve import slot_cache_bytes
+
+    print(f"# serve cache report: {max_slots} slots x page {page_len}")
+    print("arch,per_slot_MiB,kv_pages_MiB,recurrent_MiB,total_GiB")
+    rows = []
+    for arch in archs:
+        model = DecoderLM(get_config(arch))
+        sb = slot_cache_bytes(model, max_slots, page_len)
+        rows.append({"arch": arch, **sb})
+        print(f"{arch},{sb['per_slot']/2**20:.1f},{sb['kv_pages']/2**20:.1f},"
+              f"{sb['recurrent']/2**20:.1f},{sb['total']/2**30:.2f}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -388,7 +411,18 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default=None, help="append JSON results here")
+    ap.add_argument("--serve-cache-report", action="store_true",
+                    help="print slot-cache byte costs (eval_shape only; "
+                         "no allocation or compilation) and exit")
+    ap.add_argument("--serve-slots", type=int, default=128)
+    ap.add_argument("--serve-page-len", type=int, default=32_768)
     args = ap.parse_args(argv)
+
+    if args.serve_cache_report:
+        serve_cache_report(
+            ASSIGNED_ARCHS if args.all or not args.arch else [args.arch],
+            args.serve_slots, args.serve_page_len)
+        return
 
     meshes = []
     if args.both_meshes:

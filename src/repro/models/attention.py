@@ -296,6 +296,7 @@ def attention_apply(
     mrope_positions: Optional[jax.Array] = None,  # (3, B, S) for M-RoPE
     cache: Optional[Dict[str, jax.Array]] = None,
     compute_dtype=jnp.bfloat16,
+    fresh_cache: bool = False,  # static: cache known-empty (single-shot prefill)
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     b, s, _ = x.shape
     hd = cfg.head_dim
@@ -343,7 +344,8 @@ def attention_apply(
                 block_q=cfg.block_q, block_kv=cfg.block_kv,
             )
     elif s > 1:
-        out, new_cache = _prefill_attention(q, k, v, cache, cfg, scale, positions)
+        out, new_cache = _prefill_attention(q, k, v, cache, cfg, scale,
+                                            positions, fresh=fresh_cache)
     else:
         out, new_cache = _decode_attention(q, k, v, cache, cfg, scale)
 
@@ -371,81 +373,157 @@ def init_cache(
     }
 
 
-def _prefill_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale, positions):
-    """Single-shot prefill: write the prompt's K/V into the cache (from its
-    start; rolling buffers keep the window's tail) and run flash attention
-    over the prompt itself."""
+def _index_vec(cache, b: int) -> jax.Array:
+    """Per-sequence cache index as a (B,) vector.
+
+    Slot caches carry one index per sequence (continuous batching: every
+    slot sits at its own position); legacy callers may still hand in a
+    scalar, which broadcasts."""
+    index = jnp.asarray(cache["index"], jnp.int32)
+    if index.ndim == 0:
+        index = index[None]
+    return jnp.broadcast_to(index.reshape(-1), (b,))
+
+
+def _prefill_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale,
+                       positions, fresh: bool = False):
+    """Prefill one prompt *chunk*: write its K/V into the cache starting at
+    ``cache["index"]`` and attend over everything cached so far.
+
+    Chunk-aware: with ``index == 0`` and the whole prompt in one call this is
+    classic single-shot prefill; chunked prefill calls it repeatedly with the
+    cache (and its index) threaded between calls.  Positions/index are taken
+    from row 0 — a prefill batch must be position-uniform (the per-slot
+    divergence happens in decode, where every sequence is its own slot).
+
+    ``fresh`` (static) promises the cache holds nothing yet (index 0, first
+    and only chunk): attention then runs over the chunk's own K/V instead of
+    the full cache — prefill work scales with the prompt, not ``max_len``.
+    """
     b, s, _, _ = q.shape
     length = cache["k"].shape[1]
     pos1 = positions[0]
+    start = jnp.zeros((), jnp.int32) if fresh else _index_vec(cache, b)[0]
+    new_index = cache["index"] + s  # keeps the caller's index shape (donation)
 
-    out = flash_attention(
-        q, k_new, v_new,
-        q_positions=pos1, kv_positions=pos1,
-        window=cfg.window, scale=scale,
-        block_q=cfg.block_q, block_kv=cfg.block_kv,
-    )
+    if fresh:
+        # nothing cached yet: everything attendable is the chunk itself, so
+        # attention work scales with the prompt, not the cache length
+        out = flash_attention(
+            q, k_new, v_new, q_positions=pos1, kv_positions=pos1,
+            window=cfg.window, scale=scale,
+            block_q=cfg.block_q, block_kv=cfg.block_kv,
+        )
+
+    if cfg.window is None:
+        if s >= length:
+            # whole prompt at full cache length (start must be 0): keep the
+            # most recent `length` tokens, aligned to their slots
+            if not fresh:
+                out = flash_attention(
+                    q, k_new, v_new, q_positions=pos1, kv_positions=pos1,
+                    window=None, scale=scale,
+                    block_q=cfg.block_q, block_kv=cfg.block_kv,
+                )
+            k = k_new[:, s - length:, :, :].astype(cache["k"].dtype)
+            v = v_new[:, s - length:, :, :].astype(cache["v"].dtype)
+            return out, {"k": k, "v": v, "index": new_index}
+        # contiguous chunk write at offset `start`: dynamic_update_slice
+        # (fused, no scatter lowering); the engine guarantees
+        # start + s <= page_len, so the DUS clamp never shifts a write
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, start, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, start, 0, 0))
+        if not fresh:
+            # attend over the cache: slot i holds absolute position i when
+            # written (valid iff i <= last written position)
+            slots = jnp.arange(length, dtype=jnp.int32)
+            kv_pos = jnp.where(slots <= start + (s - 1), slots, 2 ** 30)
+            out = flash_attention(
+                q, k.astype(q.dtype), v.astype(q.dtype),
+                q_positions=pos1, kv_positions=kv_pos,
+                window=None, scale=scale,
+                block_q=cfg.block_q, block_kv=cfg.block_kv,
+            )
+        return out, {"k": k, "v": v, "index": new_index}
+
+    if not fresh:
+        # windowed (rolling buffer of `length` slots): earlier chunks'
+        # tokens inside the window live in the buffer — attend over
+        # [buffer ; chunk]
+        slots = jnp.arange(length, dtype=jnp.int32)
+        prev = start - 1  # last position already cached (-1: nothing yet)
+        abs_prev = prev - ((prev - slots) % length)
+        kv_pos = jnp.where(abs_prev >= 0, abs_prev, 2 ** 30)
+        k_cat = jnp.concatenate([cache["k"].astype(q.dtype), k_new], axis=1)
+        v_cat = jnp.concatenate([cache["v"].astype(q.dtype), v_new], axis=1)
+        pos_cat = jnp.concatenate([kv_pos, pos1])
+        out = flash_attention(
+            q, k_cat, v_cat, q_positions=pos1, kv_positions=pos_cat,
+            window=cfg.window, scale=scale,
+            block_q=cfg.block_q, block_kv=cfg.block_kv,
+        )
 
     if s >= length:
-        # keep the most recent `length` tokens, aligned to their slots
+        # the chunk's own tail fills the whole buffer: token at absolute
+        # position p sits in slot p % length
         tail_k = k_new[:, s - length:, :, :]
         tail_v = v_new[:, s - length:, :, :]
-        if cfg.window is not None:
-            # rolling buffer: token at absolute pos p sits in slot p % length
-            start = (s - length) % length
-            roll = jnp.roll(tail_k, start, axis=1), jnp.roll(tail_v, start, axis=1)
-            k, v = roll
-        else:
-            k, v = tail_k, tail_v
-        k = k.astype(cache["k"].dtype)
-        v = v.astype(cache["v"].dtype)
+        shift = (start + s - length) % length
+        k = jnp.roll(tail_k, shift, axis=1).astype(cache["k"].dtype)
+        v = jnp.roll(tail_v, shift, axis=1).astype(cache["v"].dtype)
     else:
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, 0, 0))
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, 0, 0))
-    index = cache["index"] + s
-    return out, {"k": k, "v": v, "index": index}
+        slots_w = (start + jnp.arange(s, dtype=jnp.int32)) % length
+        k = cache["k"].at[:, slots_w].set(k_new.astype(cache["k"].dtype))
+        v = cache["v"].at[:, slots_w].set(v_new.astype(cache["v"].dtype))
+    return out, {"k": k, "v": v, "index": new_index}
 
 
 def _decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
-    """One-token decode: write k/v at ``index``, attend over the cache.
+    """One-token decode: write k/v at each sequence's ``index``, attend over
+    the cache.
 
-    q/k_new/v_new: (B, 1, ·, D).  cache holds (B, L, KVH, D) plus the scalar
-    ``index`` = number of tokens already generated (absolute position).
+    q/k_new/v_new: (B, 1, ·, D).  cache holds (B, L, KVH, D) plus ``index``
+    — per-slot (B,) absolute positions of the incoming tokens (a scalar
+    broadcasts: the legacy lockstep-batch path).
     """
     b, _, h, d = q.shape
     kvh = cfg.n_kv_heads
     g = h // kvh
     length = cache["k"].shape[1]
-    index = cache["index"]  # scalar int32, absolute position of this token
+    index = _index_vec(cache, b)  # (B,) absolute position of this token
 
+    # per-slot scatter (rows past the end of a full linear cache drop)
     slot = index % length if cfg.window is not None else index
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    rows = jnp.arange(b, dtype=jnp.int32)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
 
-    # absolute position of each cache slot
+    # absolute position of each cache slot, per sequence
     slots = jnp.arange(length, dtype=jnp.int32)
     if cfg.window is not None:
         # rolling buffer: slot holds the latest token with that residue
         # that is <= index (the token just written)
-        abs_pos = index - ((index - slots) % length)
+        abs_pos = index[:, None] - ((index[:, None] - slots[None]) % length)
     else:
-        abs_pos = slots
-    valid = abs_pos <= index
+        abs_pos = jnp.broadcast_to(slots[None], (b, length))
+    valid = jnp.logical_and(abs_pos <= index[:, None], abs_pos >= 0)
     if cfg.window is not None:
-        valid = jnp.logical_and(valid, abs_pos > index - cfg.window)
+        valid = jnp.logical_and(valid, abs_pos > index[:, None] - cfg.window)
 
     qg = q.reshape(b, 1, kvh, g, d)
     s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k,
                    preferred_element_type=jnp.float32) * scale
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p_ = jnp.exp(s - m)
     l = jnp.sum(p_, axis=-1, keepdims=True)
-    out = jnp.einsum("bqhgk,bkhd->bqhgd", (p_ / l).astype(v.dtype), v,
+    # normalize after the f32 accumulation (same rounding order as the
+    # flash prefill path: p is cast to the value dtype, the division
+    # stays in f32) so chunked prefill and decode ingestion agree to the
+    # last rounding step
+    acc = jnp.einsum("bqhgk,bkhd->bqhgd", p_.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    out = out.reshape(b, 1, h, d).astype(q.dtype)
-    return out, {"k": k, "v": v, "index": index + 1}
+    out = (acc / l).reshape(b, 1, h, d).astype(q.dtype)
+    return out, {"k": k, "v": v, "index": cache["index"] + 1}

@@ -123,8 +123,12 @@ def block_apply(
     mrope_positions: Optional[jax.Array],
     cache: Optional[Dict[str, Any]],
     compute_dtype=jnp.bfloat16,
+    fresh_caches: bool = False,
 ):
-    """Returns (x, new_cache, aux_losses)."""
+    """Returns (x, new_cache, aux_losses).
+
+    ``fresh_caches`` (static) promises the caches are empty — single-shot
+    prefill attends over the prompt itself instead of the whole cache."""
     aux = {}
     new_cache: Dict[str, Any] = {}
 
@@ -135,7 +139,7 @@ def block_apply(
                 p["mixer"], h, blk.attn,
                 positions=positions, mrope_positions=mrope_positions,
                 cache=None if cache is None else cache.get("attn"),
-                compute_dtype=compute_dtype,
+                compute_dtype=compute_dtype, fresh_cache=fresh_caches,
             )
             if c is not None:
                 new_cache["attn"] = c
@@ -173,13 +177,18 @@ def block_apply(
         if blk.channel == "mlp":
             h = mlp_apply(p["channel"], h, blk.mlp, compute_dtype=compute_dtype)
         elif blk.channel == "moe":
+            # serving (cache present): dropless routing, so chunked prefill
+            # and decode reproduce one function independent of the split
             h, moe_aux = moe_apply(p["channel"], h, blk.moe,
-                                   compute_dtype=compute_dtype)
+                                   compute_dtype=compute_dtype,
+                                   dropless=cache is not None)
             aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()}
         elif blk.channel == "rwkv6_cm":
             xp = None if cache is None else cache.get("cm_x_prev")
             if cache is not None:
-                new_cache["cm_x_prev"] = x[:, -1:]
+                # the channel mix token-shifts its *normed* input: cache h,
+                # not x, so continuation matches the full forward's shift
+                new_cache["cm_x_prev"] = h[:, -1:]
             h = rwkv6_channel_mix_apply(p["channel"], h, blk.rwkv,
                                         x_prev=xp, compute_dtype=compute_dtype)
         if blk.post_norms:
@@ -193,9 +202,11 @@ def block_apply(
 def block_init_cache(blk: BlockCfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     c: Dict[str, Any] = {}
     if blk.mixer == "attention":
+        # per-sequence (B,) index: every cache row tracks its own absolute
+        # position, so slots in a serving batch can sit at different depths
         c["attn"] = dict(
             init_cache(batch, blk.attn, max_len, dtype),
-            index=jnp.zeros((), jnp.int32),
+            index=jnp.zeros((batch,), jnp.int32),
         )
     elif blk.mixer == "rwkv6":
         c["rwkv"] = rwkv6_init_state(batch, blk.rwkv)
@@ -237,6 +248,7 @@ def group_apply(
     caches,          # stacked over periods, or None
     compute_dtype=jnp.bfloat16,
     remat: str = "none",
+    fresh_caches: bool = False,
 ):
     """Returns (x, new_caches, aux).  Scans over periods when n_periods > 1."""
 
@@ -249,6 +261,7 @@ def group_apply(
                 p_period[f"b{i}"], x, blk,
                 positions=positions, mrope_positions=mrope_positions,
                 cache=ci, compute_dtype=compute_dtype,
+                fresh_caches=fresh_caches,
             )
             if c is not None:
                 new_caches[f"b{i}"] = c

@@ -102,6 +102,23 @@ def constant(c: float) -> Initializer:
     return init
 
 
+def chunk_len(s: int, chunk: int) -> int:
+    """Largest divisor of ``s`` that is <= ``chunk``.
+
+    Fallback for chunked scans whose per-step operator is applied
+    unconditionally (the goom layer's time-invariant A: every step
+    multiplies by A, so there is no identity padding element).  Data-
+    dependent diagonal scans (mamba/rwkv6) identity-pad instead — zero
+    inputs give ``log a = 0`` — and never hit this.  Worst case (prime
+    ``s`` > ``chunk``) degrades to L=1, i.e. a sequential outer scan:
+    slow but correct; training shapes divide evenly, and serving chunks
+    are <= ``chunk`` so they return ``s`` itself."""
+    L = min(chunk, s)
+    while s % L:
+        L -= 1
+    return L
+
+
 # ---------------------------------------------------------------------------
 # init helpers
 # ---------------------------------------------------------------------------

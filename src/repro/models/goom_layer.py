@@ -30,7 +30,7 @@ from ..core import engine
 from ..core.goom import Goom, to_goom
 from ..core.ops import goom_lse, scaled_exp
 from ..sharding import constrain
-from .common import KeyGen, Param, dense_init, dense_apply, normal
+from .common import KeyGen, Param, chunk_len, dense_init, dense_apply, normal
 from .norms import layernorm_apply, layernorm_init
 
 
@@ -94,8 +94,7 @@ def _goom_ssm_scan_shared_a(
     from ..core.goom import finite_floor
 
     s = bu_g.shape[0]
-    L = min(chunk, s)
-    assert s % L == 0
+    L = chunk_len(s, chunk)
     nc = s // L
     floor = finite_floor(jnp.float32)
 
@@ -188,10 +187,14 @@ def _goom_ssm_scan(
     if x0 is not None:  # (B,H,d,1) -> (H,d,B)
         x0c = Goom(x0.log_abs[..., 0].transpose(1, 2, 0),
                    x0.sign[..., 0].transpose(1, 2, 0))
-    states_c = engine.matrix_scan(a_b, cols(bu_g), x0c)  # (S,H,d,B)
+    # carry-threading form: serving prefill feeds chunks with the previous
+    # chunk's carry as x0 (state in/out through the layer's `state` dict)
+    states_c, carry_c = engine.matrix_scan_carry(a_b, cols(bu_g), x0c)
     states = Goom(states_c.log_abs.transpose(0, 3, 1, 2)[..., None],
                   states_c.sign.transpose(0, 3, 1, 2)[..., None])
-    return states, states[-1]
+    carry = Goom(carry_c.log_abs.transpose(2, 0, 1)[..., None],  # (B,H,d,1)
+                 carry_c.sign.transpose(2, 0, 1)[..., None])
+    return states, carry
 
 
 def goom_ssm_apply(

@@ -103,6 +103,7 @@ def moe_apply(
     cfg: MoeCfg,
     *,
     compute_dtype=jnp.bfloat16,
+    dropless: bool = False,
 ):
     """Returns (output, aux) with aux = {load_balance_loss, router_z_loss}.
 
@@ -110,10 +111,22 @@ def moe_apply(
     crosses the data-sharded batch dim — dispatch is collective-free; the
     expert einsum's (B→data, E→data) resharding is where the all-to-all
     appears, which is the EP communication pattern we want XLA to schedule.
+
+    ``dropless``: capacity ``s`` per expert — every token keeps all its
+    top-k experts (a token's k experts are distinct, so one expert sees at
+    most one entry per token).  Each buffer row is computed independently,
+    so a token's output no longer depends on sequence length or on the
+    other tokens in the row — required during *serving*, where chunked
+    prefill and single-token decode must reproduce the same function
+    regardless of how the prompt was split (capacity-factor dropping is a
+    training-time regularizer, not part of the served model).
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    cap = max(1, int(math.ceil(k * s * cfg.capacity_factor / e)))
+    if dropless:
+        cap = s
+    else:
+        cap = max(1, int(math.ceil(k * s * cfg.capacity_factor / e)))
     act = _act(cfg.activation)
 
     logits = dense_apply(p["router"], x.astype(jnp.float32))   # (B, S, E) f32

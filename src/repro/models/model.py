@@ -93,6 +93,7 @@ class DecoderLM:
         positions: Optional[jax.Array] = None,      # (B, S)
         mrope_positions: Optional[jax.Array] = None,  # (3, B, S)
         caches: Optional[List[Any]] = None,
+        fresh_caches: bool = False,  # static: caches known-empty (see prefill)
     ):
         cfg = self.cfg
         b, s = tokens.shape
@@ -124,6 +125,7 @@ class DecoderLM:
                 positions=positions, mrope_positions=mrope_positions,
                 caches=ci, compute_dtype=cd,
                 remat=cfg.remat if caches is None else "none",
+                fresh_caches=fresh_caches,
             )
             new_caches.append(nc)
             for k, v in aux.items():
@@ -200,7 +202,11 @@ class DecoderLM:
     # -- serving -------------------------------------------------------------
     def init_caches(self, batch: int, max_len: int):
         """Per-group, per-period cache lists (leaves alias 1:1 under jit
-        donation — see blocks.group_apply)."""
+        donation — see blocks.group_apply).
+
+        Every leaf leads with the ``batch`` dim, and attention caches carry a
+        per-sequence ``(batch,)`` index — rows are independent *slots*, so a
+        serving engine can gather/scatter whole sequences by row."""
         caches = []
         for g in self.cfg.groups:
             def period_cache(_=None):
@@ -216,17 +222,37 @@ class DecoderLM:
                 caches.append([period_cache() for _ in range(g.n_periods)])
         return caches
 
-    def prefill(self, params, tokens, caches, **kw):
-        """Process a prompt, filling caches.  Returns (last_logits, caches)."""
-        h, caches, _ = self.hidden_states(params, tokens, caches=caches, **kw)
+    def init_slot_caches(self, max_slots: int, page_len: int):
+        """Slot-managed decode state for continuous batching (serve.Engine).
+
+        One row per slot: fixed-size GOOM/SSM recurrent state per recurrent
+        layer plus a ``page_len`` KV page per attention layer (ring-buffer
+        for windowed layers, linear for global ones — the engine enforces
+        ``prompt + generated <= page_len`` so linear pages never wrap).
+        Identical structure to :meth:`init_caches`; the dedicated name pins
+        the slot semantics for serving callers and shape helpers."""
+        return self.init_caches(max_slots, page_len)
+
+    def prefill(self, params, tokens, caches, *, fresh_caches=False, **kw):
+        """Process a prompt chunk, filling caches from each row's cache
+        index (0 on fresh caches: classic whole-prompt prefill).  Chunked
+        callers pass absolute ``positions=`` and thread the caches between
+        calls.  ``fresh_caches`` (static) promises the caches are empty —
+        the single-shot path then attends over the prompt itself, so
+        prefill work scales with the prompt rather than ``max_len``.
+        Returns (last_logits, caches)."""
+        h, caches, _ = self.hidden_states(params, tokens, caches=caches,
+                                          fresh_caches=fresh_caches, **kw)
         return self.logits(params, h[:, -1:]), caches
 
     def decode_step(self, params, token, caches, index, **kw):
-        """One decode step: token (B,1), index scalar absolute position."""
+        """One decode step: token (B,1); ``index`` the absolute position of
+        each incoming token — scalar (lockstep batch) or (B,) per-slot."""
         b = token.shape[0]
-        positions = jnp.broadcast_to(
-            jnp.asarray(index, jnp.int32)[None, None], (b, 1)
-        )
+        idx = jnp.asarray(index, jnp.int32)
+        if idx.ndim == 0:
+            idx = idx[None]
+        positions = jnp.broadcast_to(idx.reshape(-1, 1)[:b], (b, 1))
         mrope = kw.pop("mrope_positions", None)
         if self.cfg.mrope and mrope is None:
             mrope = jnp.broadcast_to(positions[None], (3, b, 1))

@@ -33,6 +33,7 @@ from .norms import rmsnorm_apply, rmsnorm_init
 # ===========================================================================
 # shared chunked diagonal scan
 # ===========================================================================
+
 def segment_states(
     log_a: jax.Array,  # (L, ...) per-step log-decay (finite, typically <= 0)
     b: jax.Array,      # (L, ...) signed inputs
@@ -53,8 +54,8 @@ def segment_states(
         a_g = Goom(log_a, jnp.ones_like(log_a))
         b_g = Goom(safe_log(safe_abs(b)), nonzero_sign(b))
         x0_g = Goom(safe_log(safe_abs(h0)), nonzero_sign(h0))
-        states = from_goom(engine.diagonal_scan(a_g, b_g, x0_g))
-        return states, states[-1]
+        states_g, carry_g = engine.diagonal_scan_carry(a_g, b_g, x0_g)
+        return from_goom(states_g), from_goom(carry_g)
 
     a = jnp.exp(log_a)
 
@@ -184,8 +185,15 @@ def _rwkv6_scan(r, k, v, log_a, u, cfg: Rwkv6Cfg, h0=None):
     Returns (y (B,S,H,D), final state (B,H,D,D))."""
     b, s, h, dk = r.shape
     L = min(cfg.chunk, s)
-    assert s % L == 0, (s, L)
-    nc = s // L
+    # identity-pad to a whole number of chunks: log_a = 0 (decay 1) and
+    # k = 0 make the padded steps exact no-ops on the state, so any
+    # sequence length keeps O(s/L) chunks (padded y rows are dropped)
+    pad = -s % L
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, log_a = (jnp.pad(t, pw) for t in (r, k, v, log_a))
+    sp = s + pad
+    nc = sp // L
     dv = v.shape[-1]
 
     rc = r.reshape(b, nc, L, h, dk).transpose(1, 0, 3, 2, 4)   # (nc,B,H,L,D)
@@ -235,7 +243,7 @@ def _rwkv6_scan(r, k, v, log_a, u, cfg: Rwkv6Cfg, h0=None):
         return S_new, y
 
     S_final, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lac))
-    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dk)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, dk)[:, :s]
     return y, S_final
 
 
@@ -368,9 +376,15 @@ def mamba_apply(
     # locally, so it keeps the memory-bounding chunk loop.
     full_seq = cfg.scan_impl == "goom" and engine.active_seq_shards() > 1
     L = s if full_seq else min(cfg.chunk, s)
-    assert s % L == 0
-    nc = s // L
+    # identity-pad to whole chunks (Δ = 0 ⇒ log-decay 0 and zero input:
+    # exact no-op steps), so any sequence length keeps O(s/L) chunks
+    pad = 0 if full_seq else -s % L
     dtx = (dt * xc.astype(jnp.float32))  # (B,S,di)
+    if pad:
+        pw = ((0, 0), (0, pad), (0, 0))
+        dt, dtx, b_in, c_in = (jnp.pad(t, pw) for t in (dt, dtx, b_in, c_in))
+    sp = s + pad
+    nc = sp // L
     dt_c = dt.reshape(b, nc, L, di).swapaxes(0, 1)
     dtx_c = dtx.reshape(b, nc, L, di).swapaxes(0, 1)
     bin_c = b_in.reshape(b, nc, L, n).swapaxes(0, 1)
@@ -392,7 +406,7 @@ def mamba_apply(
         return h_new, y_chunk
 
     h_final, y_c = jax.lax.scan(chunk_step, h0, (dt_c, dtx_c, bin_c, c_c))
-    y = y_c.swapaxes(0, 1).reshape(b, s, di)
+    y = y_c.swapaxes(0, 1).reshape(b, sp, di)[:, :s]
 
     y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
     y = (y.astype(cd)) * jax.nn.silu(z)
@@ -409,8 +423,11 @@ def mamba_apply(
 
 
 def mamba_init_state(batch: int, cfg: MambaCfg, dtype=jnp.float32):
+    # conv tail in f32: it re-enters the conv at every chunk boundary, and a
+    # bf16 round-trip there is the one place chunked prefill would diverge
+    # from the full-sequence scan (the buffer is (d_conv-1) rows — tiny)
     return {
-        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.bfloat16),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
         "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
     }
 

@@ -1,5 +1,33 @@
-"""Serving: prefill/decode step factories and the batched request driver."""
+"""Serving: continuous-batching engine, slot state cache, chunked prefill.
 
-from .steps import make_prefill_step, make_decode_step, abstract_caches
+``Engine`` (scheduler.py) is the production path: slot-managed decode
+state, mid-flight admission/eviction, one hot jitted decode step.
+``steps.py`` keeps the legacy static-batch factories the dry-run tooling
+lowers.  See docs/serving.md.
+"""
 
-__all__ = ["make_prefill_step", "make_decode_step", "abstract_caches"]
+from .prefill import ChunkedPrefill
+from .scheduler import Engine, Request
+from .state_cache import (
+    SlotAllocator,
+    abstract_slot_caches,
+    read_slot,
+    slot_cache_bytes,
+    write_slot,
+)
+from .steps import abstract_caches, generate, make_decode_step, make_prefill_step
+
+__all__ = [
+    "Engine",
+    "Request",
+    "ChunkedPrefill",
+    "SlotAllocator",
+    "abstract_caches",
+    "abstract_slot_caches",
+    "slot_cache_bytes",
+    "read_slot",
+    "write_slot",
+    "generate",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,318 @@
+"""Continuous-batching serve engine: slot scheduler over the GOOM models.
+
+``Engine`` owns a fixed set of persistent jitted executables — the
+chunked-prefill steps (see ``prefill.py``), two *fused admission
+finishers* (final prompt piece + first-token argmax + scatter into the
+slot caches + token/position bookkeeping, one dispatch), and one decode
+step over the full slot batch — compiled at the first request and reused
+for the engine's whole lifetime: shapes are fixed at ``(max_slots, 1)``
+/ ``(1, chunk)`` / ``(1, 1)``, so nothing ever re-traces mid-flight.
+
+Scheduling loop (one ``step()``):
+
+  1. *admit*  — while a slot is free and requests wait: chunked-prefill
+     the next prompt into a fresh batch-1 cache, finishing with the fused
+     step that samples the first token and scatters the state into the
+     slot;
+  2. *decode* — one jitted step advances every slot (inactive slots
+     compute too — static shapes — but their rows are dead weight whose
+     state is overwritten at reuse).  Tokens and positions feed back
+     on-device; outputs materialize on the host lazily (``_flush``), so
+     the loop is pure dispatch between finish events;
+  3. *evict*  — finished sequences (EOS or token budget) release their
+     slots on the host; freed slots admit new requests on the next step.
+
+Per-sequence recurrent state is fixed-size (the GOOM pitch), so joins
+and evictions are single-row scatters — no compaction, no paging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import DecoderLM
+from . import state_cache
+from .prefill import ChunkedPrefill, _donate
+from .steps import _engine_scope
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``max_new_tokens`` counts every generated token (the first comes from
+    the prompt's last logits).  ``prompt + max_new_tokens`` must fit the
+    engine's ``page_len``.
+    """
+
+    uid: Any
+    prompt: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _Active:
+    request: Request
+    slot: int
+    first: Any            # first generated token: device scalar until flushed
+    out: List[int]        # materialized tokens (host)
+    start_step: int       # engine step index of this request's first decode
+    n_decoded: int = 0    # decode tokens produced (incl. not yet in `out`)
+
+
+class Engine:
+    """Continuous-batching engine over a ``DecoderLM``.
+
+    >>> eng = Engine(model, params, max_slots=4, page_len=128, chunk=16)
+    >>> eng.submit(Request(uid="a", prompt=[3, 1, 4], max_new_tokens=8))
+    >>> results = eng.run()          # {"a": [8 generated token ids]}
+
+    Greedy sampling; plain token prompts (no frontend embeddings).
+    """
+
+    def __init__(
+        self,
+        model: DecoderLM,
+        params,
+        *,
+        max_slots: int = 8,
+        page_len: int = 512,
+        chunk: int = 64,
+        backend: str = "auto",
+        mesh=None,
+        seq_shards="auto",
+        eos_scan_every: int = 8,
+    ):
+        if model.cfg.frontend is not None:
+            raise NotImplementedError(
+                "serve.Engine handles token prompts only (no frontend "
+                "prefix embeddings)")
+        if chunk > page_len:
+            raise ValueError(f"chunk {chunk} exceeds page_len {page_len}")
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.page_len = page_len
+        # EOS requests need their token values on the host; scanning every
+        # `eos_scan_every` steps (overrun past EOS is trimmed at flush, so
+        # outputs are unchanged) keeps the loop dispatch-only in between
+        # at the cost of a finished slot lingering up to K-1 extra steps
+        self.eos_scan_every = max(1, eos_scan_every)
+
+        self._prefill = ChunkedPrefill(
+            model, chunk, backend=backend, mesh=mesh, seq_shards=seq_shards)
+
+        def decode(params, tokens, caches, index):
+            with _engine_scope(backend, mesh, seq_shards):
+                logits, caches = model.decode_step(params, tokens, caches,
+                                                   index)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            # positions advance inside the step: the host loop stays pure
+            # dispatch (tokens, positions, caches all feed back on-device)
+            return nxt, caches, index + 1
+
+        self._decode = jax.jit(decode, donate_argnums=_donate((2,)))
+        # fused admission finishers: the prompt's final piece, the argmax
+        # of its logits, the scatter into the slot caches, and the
+        # token/position bookkeeping all land in ONE dispatch — admission
+        # costs (head dispatches + 1) instead of a string of eager ops
+        def _finish_admit(logits, caches, next_pos, slot_caches, slot,
+                          tok_vec, pos_vec):
+            first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[0]
+            slot_caches = state_cache.write_slot(slot_caches, caches, slot)
+            return (first, slot_caches, tok_vec.at[slot].set(first),
+                    pos_vec.at[slot].set(next_pos))
+
+        def admit_chunk(params, slot_caches, caches, tokens, positions,
+                        slot, tok_vec, pos_vec):
+            with _engine_scope(backend, mesh, seq_shards):
+                logits, caches = model.prefill(params, tokens, caches,
+                                               positions=positions)
+            return _finish_admit(logits, caches, positions[0, -1] + 1,
+                                 slot_caches, slot, tok_vec, pos_vec)
+
+        def admit_tail(params, slot_caches, caches, token, index,
+                       slot, tok_vec, pos_vec):
+            with _engine_scope(backend, mesh, seq_shards):
+                logits, caches = model.decode_step(params, token, caches,
+                                                   index)
+            return _finish_admit(logits, caches, index[0] + 1,
+                                 slot_caches, slot, tok_vec, pos_vec)
+
+        self._admit_chunk = jax.jit(admit_chunk, donate_argnums=_donate((1,)))
+        self._admit_tail = jax.jit(admit_tail, donate_argnums=_donate((1,)))
+
+        self._caches = model.init_slot_caches(max_slots, page_len)
+        # fresh per-request prefill cache as one compiled executable (the
+        # eager zeros tree costs a dispatch per leaf otherwise)
+        self._fresh = jax.jit(lambda: model.init_caches(1, page_len))
+        self._alloc = state_cache.SlotAllocator(max_slots)
+        self._queue: Deque[Request] = deque()
+        self._active: Dict[int, _Active] = {}
+        # next input token and its absolute position, per slot — both
+        # device-resident: decode feeds itself without host round-trips
+        self._tokens = jnp.zeros((max_slots,), jnp.int32)
+        self._pos = jnp.zeros((max_slots,), jnp.int32)
+        self._results: Dict[Any, List[int]] = {}
+        # decode outputs not yet materialized on the host: one (max_slots,)
+        # device vector per step since `_pending_base`.  The host only
+        # blocks on them at a finish event (or every step under EOS
+        # scanning) — see _flush.
+        self._step_id = 0
+        self._pending: List[jax.Array] = []
+        self._pending_base = 0
+
+    # -- bookkeeping --------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active or self._queue)
+
+    def result(self, uid) -> List[int]:
+        """Generated tokens of a finished request (KeyError if unknown)."""
+        return self._results[uid]
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, request: Request) -> None:
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(request.prompt) < 1:
+            raise ValueError("empty prompt: need at least one token")
+        total = len(request.prompt) + request.max_new_tokens
+        if total > self.page_len:
+            raise ValueError(
+                f"request {request.uid!r}: prompt + max_new_tokens = {total} "
+                f"exceeds page_len {self.page_len}")
+        uid = request.uid
+        if (uid in self._results
+                or any(r.uid == uid for r in self._queue)
+                or any(a.request.uid == uid for a in self._active.values())):
+            raise ValueError(f"duplicate request uid {uid!r}")
+        self._queue.append(request)
+
+    def _finish(self, act: _Active) -> Any:
+        self._results[act.request.uid] = act.out
+        del self._active[act.slot]
+        self._alloc.release(act.slot)
+        return act.request.uid
+
+    def _flush(self) -> None:
+        """Materialize pending decode outputs into every active ``out``.
+
+        One host sync covers all steps since the last flush: the step loop
+        stays dispatch-only between finish events unless an active request
+        needs per-step EOS scanning."""
+        for act in self._active.values():
+            if not act.out:  # first generated token still on device
+                act.out.append(int(np.asarray(act.first)))
+        if not self._pending:
+            return
+        arr = np.asarray(jnp.stack(self._pending))   # (n_steps, max_slots)
+        for act in self._active.values():
+            # decode step s landed in pending row s - _pending_base
+            lo = act.start_step + (len(act.out) - 1) - self._pending_base
+            hi = act.start_step + act.n_decoded - self._pending_base
+            act.out.extend(int(t) for t in arr[lo:hi, act.slot])
+        self._pending = []
+        self._pending_base = self._step_id
+
+    def _admit(self) -> List[Any]:
+        finished = []
+        while self._queue and self._alloc.n_free:
+            req = self._queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            p = int(prompt.shape[0])
+            c = self._prefill.chunk
+            r = p % c
+            slot = jnp.asarray(self._alloc.allocate(), jnp.int32)
+            caches = self._fresh()
+            # head: everything except the final piece (a full chunk when
+            # the length divides, the last token otherwise); the final
+            # piece runs in the fused admission step
+            head = prompt[:-1] if r else prompt[:p - c]
+            if head.size:
+                _, caches, _ = self._prefill(self.params, head, caches)
+            if r:
+                first, self._caches, self._tokens, self._pos = (
+                    self._admit_tail(
+                        self.params, self._caches, caches,
+                        prompt[None, -1:], np.asarray([p - 1], np.int32),
+                        slot, self._tokens, self._pos))
+            else:
+                first, self._caches, self._tokens, self._pos = (
+                    self._admit_chunk(
+                        self.params, self._caches, caches,
+                        prompt[None, p - c:],
+                        np.arange(p - c, p, dtype=np.int32)[None],
+                        slot, self._tokens, self._pos))
+            act = _Active(request=req, slot=int(slot), first=first, out=[],
+                          start_step=self._step_id)
+            self._active[int(slot)] = act
+            if req.max_new_tokens == 1 or req.eos_id is not None:
+                # needs the value now (may finish before any decode step)
+                act.out.append(int(np.asarray(first)))
+                if (req.max_new_tokens == 1
+                        or act.out[0] == req.eos_id):
+                    finished.append(self._finish(act))
+        return finished
+
+    # -- the hot loop --------------------------------------------------------
+    def step(self) -> List[Any]:
+        """Admit waiting requests, advance every slot one token, evict
+        finished sequences.  Returns the uids that finished this step."""
+        finished = self._admit()
+        if not self._active:
+            return finished
+        nxt, self._caches, self._pos = self._decode(
+            self.params, self._tokens[:, None], self._caches, self._pos)
+        self._tokens = nxt
+        self._pending.append(nxt)
+        self._step_id += 1
+        need_flush = False
+        for act in self._active.values():
+            act.n_decoded += 1
+            if 1 + act.n_decoded >= act.request.max_new_tokens:
+                need_flush = True
+            elif (act.request.eos_id is not None
+                    and len(self._pending) >= self.eos_scan_every):
+                need_flush = True
+        if not need_flush:
+            return finished
+        # only tokens this flush materializes need EOS scanning (out[0] was
+        # checked at admission): keeps eviction O(1) amortized per token
+        pre = {slot: len(act.out) for slot, act in self._active.items()}
+        self._flush()
+        for slot in list(self._active):
+            act = self._active[slot]
+            lo = max(pre[slot], 1)
+            eos = act.request.eos_id
+            fresh_toks = act.out[lo:]
+            if eos is not None and eos in fresh_toks:
+                act.out = act.out[:lo + fresh_toks.index(eos) + 1]
+                finished.append(self._finish(act))
+            elif len(act.out) >= act.request.max_new_tokens:
+                finished.append(self._finish(act))
+        return finished
+
+    def run(self, requests: Sequence[Request] = ()) -> Dict[Any, List[int]]:
+        """Drive ``step()`` until every submitted request has finished."""
+        for req in requests:
+            self.submit(req)
+        while self.has_work:
+            self.step()
+        out, self._results = self._results, {}
+        return out

@@ -1,0 +1,121 @@
+"""Slot-managed decode-state cache for continuous batching.
+
+The decode caches built by ``DecoderLM.init_slot_caches(max_slots,
+page_len)`` are pytrees whose every leaf leads with the slot dimension:
+fixed-size GOOM/SSM recurrent state per recurrent layer, a ``page_len``
+KV page per attention layer, and a per-slot ``(max_slots,)`` position
+index.  A *slot* is one resident sequence; this module provides the ops
+that move whole sequences in and out of slots:
+
+  * ``write_slot(slot_caches, src, slot)`` — scatter a freshly prefilled
+    single-sequence cache tree into row ``slot`` (jit-able, donation-safe:
+    output aliases input 1:1);
+  * ``read_slot(slot_caches, slot)`` — gather row ``slot`` back out as a
+    batch-1 cache tree (debugging / migration);
+  * ``SlotAllocator`` — the host-side free list (allocation is control
+    flow, not device work).
+
+Shape helpers (``abstract_slot_caches``, ``slot_cache_bytes``) cost a
+serving config through ``jax.eval_shape`` without allocating anything —
+``launch/dryrun.py --serve-cache-report`` builds its table from them.
+
+Why slots are cheap here: a GOOM/SSM layer's recurrent state is a few
+``(d, d)``-sized tensors per sequence *regardless of context length*, so
+an evicted slot is reusable by any new request without compaction,
+paging, or prefix bookkeeping — the only per-token storage is the
+attention layers' KV pages (absent entirely in the paper's GOOM-RNN).
+See docs/serving.md for the slot lifecycle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+
+def abstract_slot_caches(model, max_slots: int, page_len: int):
+    """ShapeDtypeStruct tree of the slot caches (no allocation)."""
+    return jax.eval_shape(lambda: model.init_slot_caches(max_slots, page_len))
+
+
+def slot_cache_bytes(model, max_slots: int, page_len: int) -> dict:
+    """Byte cost of a serving config, from shapes alone.
+
+    Returns ``{"total", "per_slot", "kv_pages", "recurrent"}`` (bytes) —
+    ``kv_pages`` counts the attention K/V leaves (the part that scales
+    with ``page_len``), ``recurrent`` everything else.
+    """
+    tree = abstract_slot_caches(model, max_slots, page_len)
+    kv = rec = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        key = jax.tree_util.keystr(path)
+        if "attn" in key and ("'k'" in key or "'v'" in key):
+            kv += nbytes
+        else:
+            rec += nbytes
+    total = kv + rec
+    return {
+        "total": total,
+        "per_slot": total // max(max_slots, 1),
+        "kv_pages": kv,
+        "recurrent": rec,
+    }
+
+
+def write_slot(slot_caches, src_caches, slot) -> Any:
+    """Scatter sequence 0 of a batch-1 cache tree into row ``slot``.
+
+    Leaf-wise ``dst.at[slot].set(src[0])``: every output leaf aliases its
+    input leaf, so a jit of this with the slot caches donated updates the
+    resident state in place.
+    """
+    return jax.tree.map(
+        lambda dst, src: dst.at[slot].set(src[0].astype(dst.dtype)),
+        slot_caches, src_caches,
+    )
+
+
+def read_slot(slot_caches, slot) -> Any:
+    """Gather row ``slot`` as a batch-1 cache tree (inverse of write)."""
+    return jax.tree.map(lambda leaf: leaf[slot][None], slot_caches)
+
+
+class SlotAllocator:
+    """Host-side free list over ``max_slots`` cache rows.
+
+    Slot numbers are row indices into the device-side slot caches; the
+    allocator itself never touches device memory.  Lowest-numbered free
+    slot first, so small workloads stay in a dense prefix of rows.
+    """
+
+    def __init__(self, max_slots: int):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.max_slots = max_slots
+        self._free: List[int] = list(range(max_slots))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def allocate(self) -> Optional[int]:
+        """Claim the lowest free slot, or None when the batch is full."""
+        if not self._free:
+            return None
+        slot = min(self._free)
+        self._free.remove(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if not (0 <= slot < self.max_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.max_slots})")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free (double release)")
+        self._free.append(slot)

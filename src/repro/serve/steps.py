@@ -1,4 +1,11 @@
-"""Serve steps: prefill (prompt → caches) and decode (one token per call).
+"""Legacy serve steps — the static-batch compatibility layer.
+
+Production serving lives in ``repro.serve.Engine`` (continuous batching,
+slot caches, chunked prefill — see ``scheduler.py``).  This module keeps
+the original step factories as thin wrappers over the same model serving
+API the Engine drives (``model.prefill`` / ``model.decode_step``): the
+dry-run tooling lowers them per (arch × shape × mesh) cell, and
+``generate`` remains the lockstep whole-batch driver for tests/examples.
 
 ``serve_step`` for the decode_* / long_* dry-run shapes is the decode step:
 one new token against a KV/SSM cache of ``seq_len`` — the caches are inputs
@@ -6,6 +13,7 @@ and outputs of the jitted function (donated in production)."""
 
 from __future__ import annotations
 
+import weakref
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -16,7 +24,11 @@ from ..models.model import DecoderLM
 
 
 def abstract_caches(model: DecoderLM, batch: int, max_len: int):
-    """ShapeDtypeStruct tree of the decode caches (no allocation)."""
+    """ShapeDtypeStruct tree of the decode caches (no allocation).
+
+    The slot-cache twin (``serve.abstract_slot_caches``) lives in
+    ``state_cache.py`` together with ``slot_cache_bytes`` for costing
+    serving configs."""
     return jax.eval_shape(lambda: model.init_caches(batch, max_len))
 
 
@@ -30,7 +42,7 @@ def _engine_scope(backend: str, mesh, seq_shards):
 
 def make_prefill_step(
     model: DecoderLM, *, backend: str = "auto", mesh=None,
-    seq_shards="auto",
+    seq_shards="auto", fresh_caches: bool = False,
 ) -> Callable:
     """``backend`` selects the scan-engine backend for every GOOM recurrence
     in the model (see ``repro.core.engine``).  It is captured when the step
@@ -38,11 +50,16 @@ def make_prefill_step(
 
     ``mesh`` (optional ``jax.sharding.Mesh``) sequence-shards the prompt's
     GOOM scans across devices (``engine.use_mesh``): long-context prefill is
-    the serving path where a single chip's memory ceiling bites first."""
+    the serving path where a single chip's memory ceiling bites first.
+
+    ``fresh_caches`` (static) promises every call feeds empty caches —
+    single-shot prefill then scales with the prompt length, not the cache
+    length (chunked serving prefill must leave it False)."""
 
     def prefill_step(params, tokens, caches, **kw):
         with _engine_scope(backend, mesh, seq_shards):
-            return model.prefill(params, tokens, caches, **kw)
+            return model.prefill(params, tokens, caches,
+                                 fresh_caches=fresh_caches, **kw)
 
     return prefill_step
 
@@ -67,6 +84,23 @@ def make_decode_step(
     return decode_step
 
 
+# jitted steps per (model, backend, mesh, seq_shards): repeated `generate`
+# calls reuse the compiled executables instead of re-tracing every call.
+# Keyed weakly on the model, and `make` receives a weak *proxy* of it —
+# the cached closure must not strongly reference the model, or the weak
+# key could never die and compilations would leak for the process life.
+_STEP_CACHE: "weakref.WeakKeyDictionary[DecoderLM, Dict]" = (
+    weakref.WeakKeyDictionary())
+
+
+def _cached_jit(model: DecoderLM, kind: str, key: Tuple, make: Callable):
+    per_model = _STEP_CACHE.setdefault(model, {})
+    full = (kind,) + key
+    if full not in per_model:
+        per_model[full] = jax.jit(make(weakref.proxy(model)))
+    return per_model[full]
+
+
 def generate(
     model: DecoderLM,
     params,
@@ -78,16 +112,25 @@ def generate(
     seq_shards="auto",
     **kw,
 ) -> jax.Array:
-    """Greedy generation driver (jit-per-step; for tests/examples)."""
+    """Greedy lockstep-batch generation driver (tests/examples).
+
+    The jitted prefill/decode steps are cached on (model, backend, mesh,
+    seq_shards): repeated calls — sweeps, evaluation loops — hit the hot
+    executables.  For request-level batching use ``serve.Engine``."""
     b, p = prompt.shape
     caches = model.init_caches(b, max_len)
-    prefill = make_prefill_step(model, backend=backend, mesh=mesh,
-                                seq_shards=seq_shards)
+    key = (backend, mesh, seq_shards)
+    prefill = _cached_jit(
+        model, "prefill", key,
+        lambda m: make_prefill_step(m, backend=backend, mesh=mesh,
+                                    seq_shards=seq_shards, fresh_caches=True))
     logits, caches = prefill(params, prompt, caches, **kw)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    step = jax.jit(make_decode_step(model, backend=backend, mesh=mesh,
-                                    seq_shards=seq_shards))
+    step = _cached_jit(
+        model, "decode", key,
+        lambda m: make_decode_step(m, backend=backend, mesh=mesh,
+                                   seq_shards=seq_shards))
     for i in range(n_tokens - 1):
         tok, caches = step(params, tok, caches, p + i)
         out.append(tok)

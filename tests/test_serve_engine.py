@@ -1,0 +1,281 @@
+"""Continuous-batching serve engine: chunked-prefill parity (engine carry
+ops at e±200 dynamic range; model logits across chunk sizes incl.
+non-divisible lengths), slot cache ops, and scheduler join/leave parity
+against per-sequence sequential decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.goom import Goom, to_goom
+from repro.configs import get_config
+from repro.models.common import unzip
+from repro.models.model import DecoderLM
+from repro.serve import (
+    Engine,
+    Request,
+    SlotAllocator,
+    abstract_slot_caches,
+    read_slot,
+    slot_cache_bytes,
+    write_slot,
+)
+from repro.serve.prefill import ChunkedPrefill
+
+CHUNKS = [1, 7, 64]
+
+
+def _model(arch="olmo-1b", f32=False):
+    cfg = get_config(arch, smoke=True)
+    if f32:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    model = DecoderLM(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def _prompt(cfg, n, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# engine carry ops: chunked == full scan, bit-level in log space at e±200
+# ---------------------------------------------------------------------------
+def _chunked_scan(scan_carry, a, b, chunk):
+    """Thread the carry through fixed-size chunks (+ remainder)."""
+    t = a.shape[0]
+    carry = None
+    outs = []
+    for lo in range(0, t, chunk):
+        hi = min(lo + chunk, t)
+        states, carry = scan_carry(a[lo:hi], b[lo:hi], carry)
+        outs.append(states)
+    return Goom(
+        jnp.concatenate([o.log_abs for o in outs]),
+        jnp.concatenate([o.sign for o in outs]),
+    )
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_diagonal_scan_carry_chunked_matches_full_e200(chunk):
+    """±e200 dynamic range: per-step log-decays of ±2 compound to log
+    magnitudes past ±200 over 150 steps — parity must hold in log space."""
+    t, c = 150, 8
+    key = jax.random.PRNGKey(0)
+    # half the channels grow (log a ≈ +2/step), half decay (≈ -2/step):
+    # compound magnitudes sweep past e^{±200} in both directions
+    drift = jnp.where(jnp.arange(c) % 2 == 0, 2.0, -2.0)
+    a = Goom(drift[None] + jax.random.uniform(key, (t, c), minval=-0.5,
+                                              maxval=0.5),
+             jnp.ones((t, c)))
+    b = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, c)))
+    full = engine.diagonal_scan(a, b)
+    assert float(jnp.max(jnp.abs(full.log_abs))) > 200.0  # range reached
+    got = _chunked_scan(engine.diagonal_scan_carry, a, b, chunk)
+    np.testing.assert_allclose(got.log_abs, full.log_abs,
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_array_equal(got.sign, full.sign)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_matrix_scan_carry_chunked_matches_full_e200(chunk):
+    t, d = 150, 4
+    # positive operands scaled so compounds sweep far past e±200: parity in
+    # log space must be near-exact (no cancellation to blur reassociation)
+    key = jax.random.PRNGKey(2)
+    a = to_goom(jnp.abs(jax.random.normal(key, (t, d, d))) * 4.0)
+    b = to_goom(jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (t, d, 1))))
+    full = engine.matrix_scan(a, b)
+    assert float(jnp.max(jnp.abs(full.log_abs))) > 200.0
+    got = _chunked_scan(engine.matrix_scan_carry, a, b, chunk)
+    np.testing.assert_allclose(got.log_abs, full.log_abs,
+                               rtol=1e-6, atol=1e-4)
+    np.testing.assert_array_equal(got.sign, full.sign)
+
+
+def test_carry_out_equals_last_state():
+    a = to_goom(jax.random.normal(jax.random.PRNGKey(4), (12, 3, 3)))
+    b = to_goom(jax.random.normal(jax.random.PRNGKey(5), (12, 3, 1)))
+    states, carry = engine.matrix_scan_carry(a, b)
+    np.testing.assert_array_equal(carry.log_abs, states.log_abs[-1])
+    np.testing.assert_array_equal(carry.sign, states.sign[-1])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill vs full-sequence prefill, per architecture
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_prefill_goom_rnn_matches_full(chunk):
+    """The paper's model (every layer a GOOM scan): chunked ingestion must
+    reproduce the full-sequence parallel scan to f32 reassociation level
+    (f32 compute isolates the scan algebra from bf16 matmul lowering)."""
+    cfg, model, params = _model("goom-rnn-124m", f32=True)
+    prompt = _prompt(cfg, 19)
+    lg_full, _ = model.prefill(params, prompt[None], model.init_caches(1, 64))
+    lg, _, pos = ChunkedPrefill(model, chunk)(
+        params, prompt, model.init_caches(1, 64))
+    assert pos == 19
+    scale = float(jnp.std(lg_full))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full[:, -1]),
+                               rtol=0, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-1b", "jamba-v0.1",
+                                  "rwkv6-7b"])
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_chunked_prefill_archs_match_full(arch, chunk):
+    """Mixed archs (attention pages, windowed SWA, mamba conv+ssm, rwkv
+    token-shift states): chunked == full within bf16 KV-cache rounding."""
+    cfg, model, params = _model(arch)
+    prompt = _prompt(cfg, 19)
+    lg_full, _ = model.prefill(params, prompt[None], model.init_caches(1, 64))
+    lg, _, _ = ChunkedPrefill(model, chunk)(
+        params, prompt, model.init_caches(1, 64))
+    scale = float(jnp.std(lg_full))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full[:, -1]),
+                               rtol=0, atol=0.1 * scale)
+
+
+def test_chunked_prefill_carry_positions_thread_across_calls():
+    """Streaming ingestion: two ChunkedPrefill calls with `start` offsets
+    equal one call over the concatenated prompt."""
+    cfg, model, params = _model("goom-rnn-124m", f32=True)
+    prompt = _prompt(cfg, 16)
+    cp = ChunkedPrefill(model, 8)
+    lg_one, _, _ = cp(params, prompt, model.init_caches(1, 64))
+    caches = model.init_caches(1, 64)
+    _, caches, pos = cp(params, prompt[:10], caches)
+    lg_two, _, _ = cp(params, prompt[10:], caches, start=pos)
+    np.testing.assert_allclose(np.asarray(lg_two), np.asarray(lg_one),
+                               rtol=0, atol=1e-4 * float(jnp.std(lg_one)))
+
+
+# ---------------------------------------------------------------------------
+# slot cache ops
+# ---------------------------------------------------------------------------
+def test_slot_write_read_roundtrip():
+    cfg, model, params = _model("jamba-v0.1")
+    slots = model.init_slot_caches(4, 32)
+    prompt = _prompt(cfg, 9)
+    _, caches, _ = ChunkedPrefill(model, 4)(params, prompt,
+                                            model.init_caches(1, 32))
+    slots = write_slot(slots, caches, 2)
+    back = read_slot(slots, 2)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(caches)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # neighboring slots untouched (still zeros)
+    other = read_slot(slots, 1)
+    for leaf in jax.tree.leaves(other):
+        assert float(jnp.max(jnp.abs(leaf.astype(jnp.float32)))) == 0.0
+
+
+def test_abstract_slot_caches_no_allocation():
+    _, model, _ = _model("olmo-1b")
+    tree = abstract_slot_caches(model, 8, 128)
+    leaves = jax.tree.leaves(tree)
+    assert leaves and all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # every leaf leads with the slot dim
+    assert all(l.shape[0] == 8 for l in leaves)
+    sb = slot_cache_bytes(model, 8, 128)
+    assert sb["total"] == sb["kv_pages"] + sb["recurrent"]
+    assert sb["kv_pages"] > 0  # olmo: attention KV pages dominate
+    shapes = jax.eval_shape(lambda: model.init_slot_caches(8, 128))
+    assert jax.tree.structure(shapes) == jax.tree.structure(tree)
+
+
+def test_slot_allocator_lifecycle():
+    alloc = SlotAllocator(3)
+    got = [alloc.allocate() for _ in range(3)]
+    assert got == [0, 1, 2] and alloc.allocate() is None
+    alloc.release(1)
+    assert alloc.n_free == 1 and alloc.allocate() == 1
+    with pytest.raises(ValueError):
+        alloc.release(5)
+    alloc.release(0)
+    with pytest.raises(ValueError):
+        alloc.release(0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: continuous batching == per-sequence sequential decode
+# ---------------------------------------------------------------------------
+def _solo(model, params, prompt, n, page_len=64, chunk=4, **kw):
+    eng = Engine(model, params, max_slots=1, page_len=page_len, chunk=chunk)
+    return eng.run([Request(uid=0, prompt=prompt, max_new_tokens=n, **kw)])[0]
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "jamba-v0.1"])
+def test_scheduler_join_leave_matches_sequential(arch):
+    """5 requests with different prompt/generation lengths through 2 slots:
+    sequences join and leave mid-batch; every output must equal the same
+    request decoded alone (per-sequence sequential decode)."""
+    cfg, model, params = _model(arch)
+    prompts = [list(map(int, _prompt(cfg, 4 + 5 * i, seed=10 + i)))
+               for i in range(5)]
+    lens = [3 + 2 * i for i in range(5)]
+    eng = Engine(model, params, max_slots=2, page_len=64, chunk=4)
+    res = eng.run([Request(uid=i, prompt=p, max_new_tokens=n)
+                   for i, (p, n) in enumerate(zip(prompts, lens))])
+    assert sorted(res) == list(range(5))
+    for i, (p, n) in enumerate(zip(prompts, lens)):
+        assert res[i] == _solo(model, params, p, n), f"request {i}"
+        assert len(res[i]) == n
+
+
+def test_scheduler_first_token_matches_full_forward():
+    """Greedy first token == argmax of the full forward at the last prompt
+    position (same check the legacy driver passes)."""
+    cfg, model, params = _model("olmo-1b")
+    prompt = _prompt(cfg, 8)
+    res = _solo(model, params, list(map(int, prompt)), 3)
+    logits, _, _ = model.apply(params, prompt[None])
+    assert res[0] == int(jnp.argmax(logits[0, -1]))
+
+
+def test_scheduler_eos_frees_slot_for_waiting_request():
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 8, seed=20)))
+    base = _solo(model, params, p0, 12)
+    eos = base[4]
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4)
+    res = eng.run([
+        Request(uid="a", prompt=p0, max_new_tokens=12, eos_id=eos),
+        Request(uid="b", prompt=list(map(int, _prompt(cfg, 5, seed=21))),
+                max_new_tokens=4),
+    ])
+    assert res["a"] == base[:5]          # truncated at EOS
+    assert len(res["b"]) == 4            # admitted after the slot freed
+
+
+def test_scheduler_rejects_oversized_empty_and_duplicate_requests():
+    _, model, params = _model("olmo-1b")
+    eng = Engine(model, params, max_slots=1, page_len=16, chunk=4)
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, prompt=[1] * 12, max_new_tokens=8))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=1, prompt=[], max_new_tokens=2))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=2, prompt=[1, 2], max_new_tokens=0))
+    eng.submit(Request(uid=3, prompt=[1, 2], max_new_tokens=2))
+    with pytest.raises(ValueError):  # duplicate uid would shadow results
+        eng.submit(Request(uid=3, prompt=[3, 4], max_new_tokens=2))
+
+
+def test_legacy_generate_reuses_cached_jitted_steps():
+    """Repeated generate calls must reuse the compiled steps (the re-jit
+    fix): the per-model cache holds exactly one prefill and one decode
+    entry across calls."""
+    from repro.serve.steps import _STEP_CACHE, generate
+
+    cfg, model, params = _model("olmo-1b")
+    prompt = _prompt(cfg, 6).reshape(1, 6)
+    out1 = generate(model, params, prompt, n_tokens=3, max_len=16)
+    cached = _STEP_CACHE[model]
+    assert len(cached) == 2  # one prefill + one decode entry
+    steps1 = list(cached.values())
+    out2 = generate(model, params, prompt, n_tokens=3, max_len=16)
+    assert list(_STEP_CACHE[model].values()) == steps1  # same executables
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))

@@ -12,8 +12,11 @@
   appD_time       — App. D: per-op wall-time of GOOM ops vs raw floats.
   roofline        — §Dry-run/§Roofline: prints the roofline table from
                     results/dryrun_baseline.json (run dryrun first).
-  scan_backends   — engine dispatch sweep: diagonal + matrix GOOM scans per
-                    backend (reference vs pallas), with parity checks.
+  scan_backends   — engine dispatch sweep: all four engine ops per backend
+                    (reference / pallas / pallas_gpu_interpret by default),
+                    with cross-backend parity checks.  ``--emit-bench``
+                    additionally writes results/BENCH_scan.json, a
+                    normalized per-op throughput table (CI artifact).
   scan_sharded    — sequence-sharded scans across the device mesh: per-
                     shard-count timings of matrix_scan / cumulative_lmme /
                     diagonal_scan, with single-device parity checks.  On
@@ -24,13 +27,14 @@
                     decode-step latency (``--preset smoke`` for CI shapes).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
-       [--preset {full,smoke}]
+       [--preset {full,smoke}] [--emit-bench]
 
-``--backend {reference,pallas,auto}`` (repeatable) selects the scan-engine
-backend.  ``scan_backends`` sweeps every requested backend (default: both
-``reference`` and ``pallas``); all other benchmarks run under the first
-requested backend (default ``auto``).  ``--preset smoke`` shrinks the
-serving benchmark to CI size.
+``--backend`` (repeatable; ``reference``/``pallas``/``auto`` or any concrete
+backend name, e.g. ``pallas_gpu_interpret``) selects the scan-engine
+backend.  ``scan_backends`` sweeps every requested backend (default:
+``reference``, ``pallas``, and ``pallas_gpu_interpret``); all other
+benchmarks run under the first requested backend (default ``auto``).
+``--preset smoke`` shrinks the serving benchmark to CI size.
 """
 
 from __future__ import annotations
@@ -242,14 +246,22 @@ def roofline():
     return {"n": len(rows)}
 
 
-def scan_backends(backends=("reference", "pallas")):
-    """Diagonal + matrix scans through the engine, per backend, with parity."""
+def scan_backends(backends=("reference", "pallas", "pallas_gpu_interpret"),
+                  emit_bench: bool = False):
+    """All four engine ops per backend, with cross-backend parity.
+
+    Default sweep: the XLA reference, whatever ``pallas`` resolves to on
+    this host (compiled TPU/GPU kernels, interpret on CPU), and the
+    GPU-shaped kernels under interpret (the CI parity column).  With
+    ``emit_bench`` a normalized per-op throughput table is written to
+    ``results/BENCH_scan.json`` (CI uploads it as the perf-trajectory
+    artifact)."""
     import numpy as np
     from repro.core import engine
     from repro.core.goom import to_goom
 
-    print("# scan_backends: engine-dispatched GOOM scans")
-    print("op,backend,resolved,shape,ms")
+    print("# scan_backends: engine-dispatched GOOM ops")
+    print("op,backend,resolved,shape,ms,melem_per_s")
     out = {}
     key = jax.random.PRNGKey(0)
     baseline = {}
@@ -258,23 +270,35 @@ def scan_backends(backends=("reference", "pallas")):
             resolved = engine.resolved_backend()
             # interpret mode executes the kernel body per grid step in
             # Python — a correctness path, so keep its shapes small.
-            small = resolved == "pallas_interpret"
+            small = resolved in ("pallas_interpret", "pallas_gpu_interpret")
             t, c = (256, 64) if small else (4096, 512)
             tm, d = (32, 8) if small else (512, 16)
+            n = 128 if small else 512
 
             da = to_goom(jnp.exp(-jnp.abs(jax.random.normal(key, (t, c)))))
             db = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, c)))
             ma = to_goom(jax.random.normal(key, (tm, d, d)) * 0.5)
             mb = to_goom(jax.random.normal(jax.random.PRNGKey(2), (tm, d, 1)) * 0.5)
+            la = to_goom(jax.random.normal(key, (n, n)))
+            lb = to_goom(jax.random.normal(jax.random.PRNGKey(4), (n, n)))
 
-            fd = jax.jit(engine.diagonal_scan)
-            fm = jax.jit(engine.matrix_scan)
-            ms_d = _bench(fd, da, db) * 1e3
-            ms_m = _bench(fm, ma, mb) * 1e3
-            out[backend] = {"resolved": resolved, "diag_ms": ms_d,
-                            "matrix_ms": ms_m}
-            print(f"diagonal_scan,{backend},{resolved},({t}x{c}),{ms_d:.2f}")
-            print(f"matrix_scan,{backend},{resolved},({tm}x{d}x{d}),{ms_m:.2f}")
+            cells = [
+                ("diagonal_scan", engine.diagonal_scan, (da, db),
+                 f"({t}x{c})", t * c),
+                ("matrix_scan", engine.matrix_scan, (ma, mb),
+                 f"({tm}x{d}x{d})", tm * d * d),
+                ("cumulative_lmme", engine.cumulative_lmme, (ma,),
+                 f"({tm}x{d}x{d})", tm * d * d),
+                ("lmme", engine.lmme, (la, lb), f"({n}x{n})", n * n),
+            ]
+            row = {"resolved": resolved}
+            for op, fn, args, shape, elems in cells:
+                ms = _bench(jax.jit(fn), *args) * 1e3
+                row[op] = {"shape": shape, "ms": ms, "elems": elems,
+                           "melem_per_s": elems / ms / 1e3}
+                print(f"{op},{backend},{resolved},{shape},{ms:.2f},"
+                      f"{row[op]['melem_per_s']:.2f}")
+            out[backend] = row
 
             # parity across backends on a shared small problem
             pa = to_goom(jax.random.normal(key, (24, 4, 4)) * 0.5)
@@ -284,6 +308,14 @@ def scan_backends(backends=("reference", "pallas")):
                 np.testing.assert_allclose(
                     got.log_abs, baseline["matrix"], rtol=1e-4, atol=1e-3)
             baseline["matrix"] = np.asarray(got.log_abs)
+    if emit_bench:
+        path = os.path.join(RESULTS_DIR, "BENCH_scan.json")
+        with open(path, "w") as f:
+            json.dump({"schema": "bench_scan/v1",
+                       "device_kind": jax.devices()[0].device_kind,
+                       "platform": jax.default_backend(),
+                       "backends": out}, f, indent=1)
+        print(f"wrote {path}")
     return out
 
 
@@ -461,11 +493,17 @@ def main() -> None:
     ap.add_argument("names", nargs="*", metavar="name",
                     help=f"benchmarks to run (default: all): {', '.join(ALL)}")
     ap.add_argument("--backend", action="append",
-                    choices=["reference", "pallas", "auto"],
+                    choices=["reference", "pallas", "auto",
+                             "pallas_tpu", "pallas_gpu", "pallas_interpret",
+                             "pallas_gpu_interpret", "xla_reference"],
                     help="scan-engine backend; repeat to sweep (scan_backends "
-                         "sweeps reference+pallas by default)")
+                         "sweeps reference+pallas+pallas_gpu_interpret by "
+                         "default)")
     ap.add_argument("--preset", choices=["full", "smoke"], default="full",
                     help="serve_throughput problem size (smoke = CI shapes)")
+    ap.add_argument("--emit-bench", action="store_true",
+                    help="write results/BENCH_scan.json (normalized per-op "
+                         "throughput from scan_backends; CI artifact)")
     args = ap.parse_args()
     names = args.names or list(ALL)
     if "scan_sharded" in names and "xla_force_host_platform_device_count" \
@@ -485,7 +523,9 @@ def main() -> None:
         t0 = time.time()
         if name == "scan_backends":
             results[name] = scan_backends(
-                tuple(args.backend or ("reference", "pallas")))
+                tuple(args.backend
+                      or ("reference", "pallas", "pallas_gpu_interpret")),
+                emit_bench=args.emit_bench)
         elif name == "serve_throughput":
             results[name] = serve_throughput(
                 args.preset, (args.backend or ["auto"])[0])

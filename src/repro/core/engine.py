@@ -24,15 +24,26 @@ resolves to a concrete backend per-call:
   requested platform   log dtype    resolved
   ========= ========== ============ =================================
   auto      tpu        float32      ``pallas_tpu``      (compiled)
-  auto      tpu        float64      ``xla_reference``   (kernels are f32)
-  auto      cpu / gpu  any          ``xla_reference``
+  auto      gpu        float32      ``pallas_gpu``      (Triton)
+  auto      tpu/gpu    float64      ``xla_reference``   (kernels are f32)
+  auto      cpu        any          ``xla_reference``
   pallas    tpu        any          ``pallas_tpu``
-  pallas    cpu / gpu  any          ``pallas_interpret`` (debug/parity)
+  pallas    gpu        any          ``pallas_gpu``
+  pallas    cpu        any          ``pallas_interpret`` (debug/parity)
   reference any        any          ``xla_reference``
   ========= ========== ============ =================================
 
-The three concrete names may also be requested literally to force a path
-(parity tests force ``pallas_interpret`` on CPU).
+Every concrete name may also be requested literally to force a path
+(parity tests force ``pallas_interpret`` / ``pallas_gpu_interpret`` on
+CPU).  The platform is resolved *once per config push* and cached on the
+config entry — never re-read per call or inside a trace.
+
+Block configs
+-------------
+Tiling is per ``(op, backend)`` (``repro.kernels.blocks.BlockConfig``),
+resolved in precedence order: ``use_blocks()`` overrides > the persisted
+autotune cache (``engine.autotune()`` / ``repro.kernels.autotune``) >
+static defaults.  No caller ever names a block size.
 
 Overrides
 ---------
@@ -41,7 +52,12 @@ Overrides
     with engine.use_backend("pallas"):          # scoped
         states = engine.matrix_scan(a, b)
 
+    with engine.use_blocks(matrix_scan={"block_t": 64}):
+        states = engine.matrix_scan(a, b)       # pinned tiling
+
     engine.set_default_backend("reference")     # process-wide default
+
+    engine.autotune()   # sweep tilings for the resolved backend, persist
 
 ``use_backend`` affects *tracing*: a ``jax.jit``-compiled function captures
 the backend that was active when it was first traced — construct jitted
@@ -70,7 +86,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Callable, Optional, Tuple, Union
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 
@@ -80,11 +97,13 @@ from . import scan as _scan
 __all__ = [
     "EngineConfig",
     "use_backend",
+    "use_blocks",
     "use_mesh",
     "set_default_backend",
     "get_config",
     "resolved_backend",
     "active_seq_shards",
+    "autotune",
     "lmme",
     "diagonal_scan",
     "diagonal_scan_carry",
@@ -94,19 +113,23 @@ __all__ = [
     "selective_reset_scan",
 ]
 
+# (op, backend-pattern, BlockConfig) override entries; "*" matches every
+# backend.  Later entries win (use_blocks scopes append).
+_BlockEntry = Tuple[str, str, Any]
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Engine-wide knobs.  Block sizes are *hints*: the kernel wrappers clamp
-    them to the (padded) problem, so small shapes never over-pad."""
+    """Engine-wide knobs.  Block tiling lives in per-(op, backend)
+    ``BlockConfig`` tables (see ``use_blocks``), not here."""
 
     backend: str = "auto"
-    block_t: int = 256        # diagonal scan: time block
-    block_c: int = 512        # diagonal scan: channel block
-    block_t_matrix: int = 128  # matrix scan: time chunk
-    block_n: int = 128        # lmme tiles
-    block_m: int = 128
-    block_d: int = 128
+    # platform the backend resolves against, stamped once at config-push
+    # time (None on the import-time default: resolved lazily through the
+    # cached dispatch.current_platform(), never re-read per call).
+    platform: Optional[str] = None
+    # block-config override entries, appended by use_blocks scopes
+    blocks: Tuple[_BlockEntry, ...] = ()
     # -- sharded scans (see module docstring) -------------------------------
     mesh: Optional[Any] = None          # jax.sharding.Mesh; None -> rules
     seq_axis: Optional[str] = None      # mesh axis carrying the time shards
@@ -118,6 +141,12 @@ _DEFAULT = EngineConfig()
 _STACK: list = []
 
 
+def _current_platform() -> str:
+    from repro.kernels import dispatch
+
+    return dispatch.current_platform()
+
+
 def get_config() -> EngineConfig:
     return _STACK[-1] if _STACK else _DEFAULT
 
@@ -125,13 +154,52 @@ def get_config() -> EngineConfig:
 def set_default_backend(backend: str) -> None:
     """Set the process-wide default backend (outside any ``use_backend``)."""
     global _DEFAULT
-    _DEFAULT = dataclasses.replace(_DEFAULT, backend=backend)
+    _DEFAULT = dataclasses.replace(_DEFAULT, backend=backend,
+                                   platform=_current_platform())
 
 
 @contextlib.contextmanager
 def use_backend(backend: str = "auto", **overrides):
-    """Scoped backend/config override (see module docstring for names)."""
+    """Scoped backend/config override (see module docstring for names).
+
+    The platform is resolved here, once per push — backend resolution
+    inside the scope (including at trace time) reuses the stamped value."""
+    overrides.setdefault("platform", _current_platform())
     cfg = dataclasses.replace(get_config(), backend=backend, **overrides)
+    _STACK.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _STACK.pop()
+
+
+@contextlib.contextmanager
+def use_blocks(_backend: str = "*", **per_op):
+    """Scoped per-op block-config overrides.
+
+    Keyword names are engine ops, values are dicts of ``BlockConfig``
+    fields (or ``BlockConfig`` instances)::
+
+        with engine.use_blocks(matrix_scan={"block_t": 64},
+                               lmme={"block_n": 256, "block_d": 512}):
+            ...
+
+    The positional ``_backend`` restricts the override to one concrete
+    backend name (default ``"*"`` = whatever backend resolves).  Overrides
+    nest: inner scopes win field-by-field over outer scopes, which win over
+    the autotune cache and the static defaults.  Nothing outside
+    ``kernels/`` names a block size except through this context manager.
+    """
+    from repro.kernels.blocks import BlockConfig, OPS
+
+    entries = []
+    for op, fields in per_op.items():
+        if op not in OPS:
+            raise ValueError(f"unknown engine op {op!r}; one of {OPS}")
+        cfg = fields if isinstance(fields, BlockConfig) else BlockConfig(**fields)
+        entries.append((op, _backend, cfg))
+    base = get_config()
+    cfg = dataclasses.replace(base, blocks=base.blocks + tuple(entries))
     _STACK.append(cfg)
     try:
         yield cfg
@@ -152,6 +220,7 @@ def use_mesh(mesh, *, seq_axis: Optional[str] = None,
     if mesh is not None and seq_axis is None:
         names = tuple(mesh.axis_names)
         seq_axis = "seq" if "seq" in names else names[-1]
+    overrides.setdefault("platform", _current_platform())
     cfg = dataclasses.replace(
         get_config(), mesh=mesh, seq_axis=seq_axis, batch_axis=batch_axis,
         seq_shards=1 if mesh is None else seq_shards, **overrides)
@@ -162,15 +231,24 @@ def use_mesh(mesh, *, seq_axis: Optional[str] = None,
         _STACK.pop()
 
 
-def _blocks(cfg: EngineConfig) -> dict:
-    return {
-        "block_t": cfg.block_t,
-        "block_c": cfg.block_c,
-        "block_t_matrix": cfg.block_t_matrix,
-        "block_n": cfg.block_n,
-        "block_m": cfg.block_m,
-        "block_d": cfg.block_d,
-    }
+def _block_overrides(cfg: EngineConfig, op: str, resolved: str,
+                     shapes: Optional[Tuple[int, ...]]):
+    """Merge the active use_blocks entries for (op, resolved), or None.
+
+    None tells dispatch to consult the autotune cache, then defaults;
+    explicit entries merge field-by-field *on top of* that same base, so
+    pinning one field keeps the autotuned values of the others."""
+    matches = [entry for (o, b, entry) in cfg.blocks
+               if o == op and b in ("*", resolved)]
+    if not matches:
+        return None
+    from repro.kernels.autotune import cached_blocks
+    from repro.kernels.blocks import merge
+
+    out = cached_blocks(op, resolved, shapes)  # cache winner or defaults
+    for entry in matches:
+        out = merge(out, entry)
+    return out
 
 
 def resolved_backend(dtype=None) -> str:
@@ -179,8 +257,10 @@ def resolved_backend(dtype=None) -> str:
 
     import jax.numpy as jnp
 
+    cfg = get_config()
     return dispatch.resolve_backend(
-        get_config().backend, dtype=jnp.float32 if dtype is None else dtype
+        cfg.backend, platform=cfg.platform,
+        dtype=jnp.float32 if dtype is None else dtype,
     )
 
 
@@ -238,13 +318,52 @@ def active_seq_shards() -> int:
     return 1 if shard is None else shard.n_shards
 
 
-def _impl(op: str, dtype) -> Callable:
+def _impl(op: str, dtype, shapes: Optional[Tuple[int, ...]] = None) -> Callable:
     from repro.kernels import dispatch
 
     cfg = get_config()
-    resolved = dispatch.resolve_backend(cfg.backend, dtype=dtype)
-    return dispatch.get_impl(op, resolved, _blocks(cfg),
-                             shard=_resolved_shard())
+    resolved = dispatch.resolve_backend(cfg.backend, platform=cfg.platform,
+                                        dtype=dtype)
+    return dispatch.get_impl(op, resolved,
+                             blocks=_block_overrides(cfg, op, resolved, shapes),
+                             shard=_resolved_shard(), shapes=shapes)
+
+
+# ---------------------------------------------------------------------------
+# autotuning
+# ---------------------------------------------------------------------------
+def autotune(
+    ops: Optional[Tuple[str, ...]] = None,
+    *,
+    backend: Optional[str] = None,
+    shapes: Optional[Mapping[str, Tuple[int, ...]]] = None,
+    reps: int = 3,
+    cache_path: Optional[str] = None,
+    verbose: bool = False,
+) -> Dict[str, dict]:
+    """Sweep candidate tilings and persist winners to the autotune cache.
+
+    ``ops`` defaults to every engine op; ``backend`` defaults to what the
+    current config resolves to (so ``engine.autotune()`` on a GPU host
+    tunes ``pallas_gpu``); ``shapes`` maps op -> problem dims
+    (see ``kernels.autotune.DEFAULT_SHAPES`` for the conventions).  Winners
+    are keyed by ``(op, backend, device_kind, shape-bucket)`` and consumed
+    automatically by every subsequent engine call on matching shapes — see
+    docs/engine.md for the cache file format.  Returns per-op reports."""
+    from repro.kernels import autotune as _autotune
+    from repro.kernels.blocks import OPS
+
+    backend = backend or resolved_backend()
+    reports = {}
+    for op in ops or OPS:
+        reports[op] = _autotune.autotune_op(
+            op, backend, (shapes or {}).get(op), reps=reps, path=cache_path,
+            verbose=verbose)
+        if verbose:
+            r = reports[op]
+            print(f"autotune[{op}/{backend}]: {r['blocks']} "
+                  f"({r['ms']:.3f} ms) -> {r['key']}")
+    return reports
 
 
 # ---------------------------------------------------------------------------
@@ -252,17 +371,21 @@ def _impl(op: str, dtype) -> Callable:
 # ---------------------------------------------------------------------------
 def lmme(a: Goom, b: Goom) -> Goom:
     """LMME over GOOMs: (..., n, d) ∘ (..., d, m), batch dims broadcast."""
-    return _impl("lmme", a.dtype)(a, b)
+    hint = (a.shape[-2], a.shape[-1], b.shape[-1])
+    return _impl("lmme", a.dtype, hint)(a, b)
 
 
 def diagonal_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
     """All states of x_t = a_t ⊙ x_{t-1} ⊕ b_t over the leading axis."""
-    return _impl("diagonal_scan", a.dtype)(a, b, x0)
+    shape = jax.numpy.broadcast_shapes(a.shape, b.shape)
+    hint = (shape[0], math.prod(shape[1:]) if shape[1:] else 1)
+    return _impl("diagonal_scan", a.dtype, hint)(a, b, x0)
 
 
 def matrix_scan(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
     """All states of X_t = A_t X_{t-1} ⊕ B_t (fused PSCAN∘LMME on Pallas)."""
-    return _impl("matrix_scan", a.dtype)(a, b, x0)
+    hint = (a.shape[0], a.shape[-1], b.shape[-1])
+    return _impl("matrix_scan", a.dtype, hint)(a, b, x0)
 
 
 def _carry_out(states: Goom) -> Tuple[Goom, Goom]:
@@ -294,7 +417,8 @@ def matrix_scan_carry(
 
 def cumulative_lmme(a: Goom) -> Goom:
     """All prefix products A_t ··· A_1 (paper eq. 24's scan)."""
-    return _impl("cumulative_lmme", a.dtype)(a)
+    hint = (a.shape[0], a.shape[-1])
+    return _impl("cumulative_lmme", a.dtype, hint)(a)
 
 
 def selective_reset_scan(

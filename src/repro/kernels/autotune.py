@@ -1,0 +1,284 @@
+"""Per-op block-config autotuner with a persisted JSON cache.
+
+Sweeps candidate tilings for an ``(op, backend)`` pair on a representative
+problem shape, times each end-to-end (jitted, ``block_until_ready``), and
+persists the winner keyed by
+
+    ``op | backend | device_kind | shape-bucket``
+
+where ``device_kind`` is ``jax.devices()[0].device_kind`` (e.g. ``cpu``,
+``NVIDIA A100-SXM4-40GB``, ``TPU v4``) and the shape bucket rounds every
+problem dim up to a power of two (``kernels.blocks.shape_bucket``) so
+nearby shapes share a winner.
+
+Cache file format (JSON, one object)::
+
+    {
+      "version": 1,
+      "entries": {
+        "lmme|pallas_gpu|NVIDIA A100-SXM4-40GB|1024x512x1024": {
+          "blocks": {"block_n": 64, "block_m": 128, "block_d": 32,
+                     "num_warps": 8, "num_stages": 2},
+          "ms": 0.41,
+          "candidates": 12
+        },
+        ...
+      }
+    }
+
+The cache is consulted by ``dispatch.get_impl`` whenever no explicit
+override is active (``cached_blocks``), so autotuned winners flow to every
+call site with no caller naming a block size.  Location: ``$REPRO_AUTOTUNE_CACHE``
+if set, else ``~/.cache/repro/autotune.json``.  The user-facing entry point
+is ``repro.core.engine.autotune()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goom import Goom
+
+from .blocks import BlockConfig, OPS, default_blocks, merge, shape_bucket
+
+__all__ = ["autotune_op", "cached_blocks", "candidates_for", "cache_path",
+           "load_cache", "save_entry", "device_kind", "cache_key",
+           "DEFAULT_SHAPES"]
+
+_VERSION = 1
+
+# Representative problem shapes per op, used when the caller doesn't supply
+# any (engine.autotune() with no arguments): big enough that tiling matters,
+# small enough to sweep in seconds on an accelerator.
+DEFAULT_SHAPES: Dict[str, Tuple[int, ...]] = {
+    "lmme": (512, 512, 512),          # (n, d, m)
+    "diagonal_scan": (4096, 512),     # (t, c)
+    "matrix_scan": (512, 16, 16),     # (t, d, m)
+    "cumulative_lmme": (512, 16),     # (t, d)
+}
+
+
+def cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind
+
+
+def cache_key(op: str, backend: str, bucket: Tuple[int, ...],
+              kind: Optional[str] = None) -> str:
+    kind = device_kind() if kind is None else kind
+    return f"{op}|{backend}|{kind}|{'x'.join(map(str, bucket))}"
+
+
+# ---------------------------------------------------------------------------
+# cache load/store (in-memory mirror + JSON file)
+# ---------------------------------------------------------------------------
+_CACHE: Optional[Dict[str, dict]] = None  # None = not loaded yet
+_CACHE_FILE: Optional[str] = None
+
+
+def load_cache(path: Optional[str] = None, *, reload: bool = False
+               ) -> Dict[str, dict]:
+    """The entries dict, loaded once per process (or per explicit path).
+
+    The path is sticky: once a cache file has been loaded or written
+    (e.g. ``engine.autotune(cache_path=...)``), path-less reads —
+    including ``cached_blocks`` under ``get_impl`` — keep using it, so
+    winners persisted anywhere are consumed process-wide."""
+    global _CACHE, _CACHE_FILE
+    path = path or _CACHE_FILE or cache_path()
+    if _CACHE is not None and _CACHE_FILE == path and not reload:
+        return _CACHE
+    entries: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, dict) and data.get("version") == _VERSION:
+            entries = dict(data.get("entries", {}))
+    except (OSError, ValueError):
+        pass  # missing or corrupt cache: start empty
+    _CACHE, _CACHE_FILE = entries, path
+    return entries
+
+
+def save_entry(key: str, blocks: BlockConfig, ms: float, n_candidates: int,
+               path: Optional[str] = None) -> None:
+    """Insert/overwrite one winner and persist the whole cache atomically."""
+    path = path or cache_path()
+    entries = load_cache(path)
+    entries[key] = {"blocks": blocks.to_dict(), "ms": ms,
+                    "candidates": n_candidates}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": _VERSION, "entries": entries}, f, indent=1,
+                  sort_keys=True)
+    os.replace(tmp, path)
+
+
+def cached_blocks(op: str, backend: str,
+                  shapes: Optional[Tuple[int, ...]] = None) -> BlockConfig:
+    """The BlockConfig ``get_impl`` should use: autotuned winner for the
+    shape bucket when one is persisted, else the static default."""
+    base = default_blocks(op, backend)
+    if shapes is None:
+        return base
+    entry = load_cache().get(cache_key(op, backend, shape_bucket(shapes)))
+    if not entry:
+        return base
+    known = {f.name for f in dataclasses.fields(BlockConfig)}
+    fields = {k: v for k, v in entry.get("blocks", {}).items() if k in known}
+    return merge(base, BlockConfig(**fields))
+
+
+# ---------------------------------------------------------------------------
+# candidate tilings
+# ---------------------------------------------------------------------------
+def _geom(lo: int, hi: int) -> List[int]:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def candidates_for(op: str, backend: str,
+                   shapes: Tuple[int, ...]) -> List[BlockConfig]:
+    """Candidate tilings for one (op, backend) on a problem of ``shapes``.
+
+    Candidates are clipped to the problem (no tile larger than the padded
+    dim) and kept deliberately small — the sweep is end-to-end timing, so
+    cost is candidates x reps kernel launches."""
+    gpu = backend.startswith("pallas_gpu")
+    interp = backend in ("pallas_interpret", "pallas_gpu_interpret")
+
+    def clip(vals: Iterable[int], dim: int) -> List[int]:
+        vals = list(vals)
+        kept = [v for v in vals if v <= max(16, 2 * dim)]
+        return kept or [min(vals)]
+
+    out: List[BlockConfig] = []
+    if op == "lmme":
+        n, d, m = shapes
+        tiles = _geom(16, 128) if gpu else [128, 256]
+        warps = [4, 8] if gpu else [None]
+        for bn in clip(tiles, n):
+            for bd in clip(tiles, d):
+                for w in warps:
+                    out.append(BlockConfig(block_n=bn, block_m=bn, block_d=bd,
+                                           num_warps=w,
+                                           num_stages=2 if gpu else None))
+    elif op == "diagonal_scan":
+        t, c = shapes
+        ts = _geom(32, 256) if gpu else [128, 256, 512]
+        cs = _geom(64, 256) if gpu else [256, 512]
+        for bt in clip(ts, t):
+            for bc in clip(cs, c):
+                out.append(BlockConfig(block_t=bt, block_c=bc,
+                                       num_warps=4 if gpu else None,
+                                       num_stages=1 if gpu else None))
+    else:  # matrix_scan / cumulative_lmme (and the reference chunk length)
+        t = shapes[0]
+        ts = _geom(8, 64) if gpu else [32, 64, 128, 256]
+        for bt in clip(ts, t):
+            out.append(BlockConfig(block_t=bt,
+                                   num_warps=4 if gpu else None,
+                                   num_stages=1 if gpu else None))
+    if interp:
+        out = out[:2]  # interpret mode is a correctness path; don't sweep it
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+def _example_args(op: str, shapes: Tuple[int, ...]) -> Tuple[Goom, ...]:
+    key = jax.random.PRNGKey(0)
+
+    def g(k, shape, scale=0.5):
+        v = jax.random.normal(k, shape) * scale
+        return Goom(jnp.log(jnp.abs(v)), jnp.sign(v))
+
+    k1, k2 = jax.random.split(key)
+    if op == "lmme":
+        n, d, m = shapes
+        return g(k1, (n, d)), g(k2, (d, m))
+    if op == "diagonal_scan":
+        t, c = shapes
+        return (Goom(-jnp.abs(jax.random.normal(k1, (t, c))),
+                     jnp.ones((t, c))), g(k2, (t, c)))
+    if op == "matrix_scan":
+        t, d, m = shapes
+        return g(k1, (t, d, d)), g(k2, (t, d, m))
+    if op == "cumulative_lmme":
+        t, d = shapes
+        return (g(k1, (t, d, d)),)
+    raise ValueError(f"unknown op {op!r}; one of {OPS}")
+
+
+def _time_call(fn, args, reps: int) -> float:
+    out = fn(*args)  # compile / first-run
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def autotune_op(
+    op: str,
+    backend: str,
+    shapes: Optional[Tuple[int, ...]] = None,
+    *,
+    candidates: Optional[Sequence[BlockConfig]] = None,
+    reps: int = 3,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> dict:
+    """Sweep candidate tilings for ``(op, backend)`` and persist the winner.
+
+    Returns a report dict: the winning BlockConfig, its time, the full
+    per-candidate timing table, and the cache key written."""
+    from . import dispatch  # local: autotune is imported by dispatch
+
+    shapes = tuple(shapes or DEFAULT_SHAPES[op])
+    args = _example_args(op, shapes)
+    base = default_blocks(op, backend)
+    cands = list(candidates or candidates_for(op, backend, shapes))
+    table = []
+    best: Tuple[float, BlockConfig] = (float("inf"), base)
+    for cand in cands:
+        blocks = merge(base, cand)
+        fn = jax.jit(dispatch.get_impl(op, backend, blocks))
+        try:
+            ms = _time_call(fn, args, reps)
+        except Exception as e:  # a candidate tiling may simply not lower
+            table.append({"blocks": blocks.to_dict(), "error": repr(e)})
+            continue
+        table.append({"blocks": blocks.to_dict(), "ms": ms})
+        if verbose:
+            print(f"  {op}/{backend} {blocks.to_dict()} -> {ms:.3f} ms")
+        if ms < best[0]:
+            best = (ms, blocks)
+    if not any("ms" in row for row in table):
+        raise RuntimeError(
+            f"autotune: no candidate for ({op}, {backend}) ran; "
+            f"errors: {[r.get('error') for r in table]}")
+    key = cache_key(op, backend, shape_bucket(shapes))
+    save_entry(key, best[1], best[0], len(cands), path=path)
+    return {"op": op, "backend": backend, "shapes": shapes, "key": key,
+            "blocks": best[1].to_dict(), "ms": best[0], "table": table}

@@ -1,20 +1,36 @@
-"""Backend resolution for the scan engine.
+"""Backend registry + resolution for the scan engine.
 
-Maps a *requested* backend (user/config intent) to a *resolved* backend
-(what actually runs), given the platform and operand dtype:
+Two layers:
+
+**Resolution** maps a *requested* backend (user/config intent) to a
+*resolved* backend (what actually runs), given the platform and operand
+dtype:
 
   requested        platform   dtype        resolved
   ---------        --------   -----        --------
   auto             tpu        f32          pallas_tpu
-  auto             tpu        f64/other    xla_reference  (kernels are f32)
-  auto             cpu/gpu    any          xla_reference  (interpret mode is
-                                           a debug path, never a perf win)
+  auto             gpu        f32          pallas_gpu     (Triton lowering)
+  auto             tpu/gpu    f64/other    xla_reference  (kernels are f32)
+  auto             cpu        any          xla_reference
   pallas           tpu        any->f32     pallas_tpu
-  pallas           cpu/gpu    any->f32     pallas_interpret
+  pallas           gpu        any->f32     pallas_gpu
+  pallas           cpu        any->f32     pallas_interpret
   reference        any        any          xla_reference
 
-``pallas_tpu`` / ``pallas_interpret`` / ``xla_reference`` may also be
-requested literally (forced), which is what the parity tests do.
+Every concrete name may also be requested literally (forced), which is what
+the parity tests do: ``pallas_interpret`` runs the TPU-shaped kernels and
+``pallas_gpu_interpret`` the GPU-shaped ones, both under ``interpret=True``
+on any host (the CI ``gpu-interpret`` job).
+
+**Registry**: implementations are registered per ``(op, backend)`` with
+:func:`register_impl` — a factory ``(resolved, BlockConfig) -> callable``.
+Adding a backend is one registration per op, not an edit to an enumerated
+if-chain; third-party/experimental backends can call
+:func:`register_backend` to extend the concrete set.
+
+The platform is read once per process (:func:`current_platform` is cached)
+— never per call, and never inside a trace; the engine additionally stamps
+it on each config push (see ``repro.core.engine``).
 
 This module owns the kernel-facing callables (padding and chunking live in
 ``kernels/*/ops.py``); the user-facing API with config overrides is
@@ -24,7 +40,8 @@ This module owns the kernel-facing callables (padding and chunking live in
 
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,82 +50,176 @@ from repro.core.goom import Goom
 from repro.core.ops import lmme_reference
 from repro.core import scan as _scan
 
+from .blocks import BlockConfig, OPS
 from .goom_scan import goom_scan_pallas, matrix_scan_pallas
 from .lmme import lmme_pallas
 
-__all__ = ["BACKENDS", "resolve_backend", "get_impl"]
+__all__ = ["BACKENDS", "CONCRETE_BACKENDS", "OPS", "current_platform",
+           "resolve_backend", "register_impl", "register_backend",
+           "registered_backends", "get_impl"]
 
-BACKENDS = ("auto", "pallas", "reference",
-            "pallas_tpu", "pallas_interpret", "xla_reference")
+CONCRETE_BACKENDS = ["xla_reference", "pallas_tpu", "pallas_interpret",
+                     "pallas_gpu", "pallas_gpu_interpret"]
+BACKENDS = ("auto", "pallas", "reference") + tuple(CONCRETE_BACKENDS)
 
 
-def resolve_backend(requested: str, *, dtype=jnp.float32) -> str:
-    """Resolve a requested backend name to one of the three concrete ones."""
+@functools.lru_cache(maxsize=None)
+def current_platform() -> str:
+    """The process's default JAX platform ("cpu" / "gpu" / "tpu").
+
+    Cached on first use: backend resolution must not re-read
+    ``jax.default_backend()`` per call (it walks the backend registry and,
+    under tracing, would make resolution depend on trace-time state)."""
+    return jax.default_backend()
+
+
+def resolve_backend(requested: str, *, platform: Optional[str] = None,
+                    dtype=jnp.float32) -> str:
+    """Resolve a requested backend name to a concrete registered one.
+
+    ``platform`` defaults to the cached process platform; the engine passes
+    the platform it stamped at config-push time, tests pass it explicitly
+    to cover the whole resolution matrix without monkeypatching JAX."""
     if requested in ("reference", "xla_reference"):
         return "xla_reference"
-    if requested in ("pallas_tpu", "pallas_interpret"):
+    if requested in CONCRETE_BACKENDS:
         return requested  # forced: trust the caller (tests, debugging)
-    platform = jax.default_backend()
+    if platform is None:
+        platform = current_platform()
     if requested == "pallas":
-        return "pallas_tpu" if platform == "tpu" else "pallas_interpret"
+        if platform == "tpu":
+            return "pallas_tpu"
+        if platform == "gpu":
+            return "pallas_gpu"
+        return "pallas_interpret"
     if requested != "auto":
         raise ValueError(f"unknown backend {requested!r}; one of {BACKENDS}")
-    if platform == "tpu" and jnp.dtype(dtype) == jnp.dtype(jnp.float32):
-        return "pallas_tpu"
+    if jnp.dtype(dtype) == jnp.dtype(jnp.float32):
+        if platform == "tpu":
+            return "pallas_tpu"
+        if platform == "gpu":
+            return "pallas_gpu"
     return "xla_reference"
 
 
 # ---------------------------------------------------------------------------
-# concrete implementations, keyed by resolved backend
+# the registry: (op, backend) -> factory(resolved, BlockConfig) -> callable
 # ---------------------------------------------------------------------------
-def _lmme(resolved: str, blocks: dict):
-    if resolved == "xla_reference":
-        return lmme_reference
+_Factory = Callable[[str, BlockConfig], Callable]
+_REGISTRY: Dict[Tuple[str, str], _Factory] = {}
+
+
+def register_impl(op: str, *backends: str):
+    """Decorator: register a factory for ``op`` on each named backend."""
+
+    def deco(factory: _Factory) -> _Factory:
+        for backend in backends:
+            _REGISTRY[(op, backend)] = factory
+        return factory
+
+    return deco
+
+
+def register_backend(name: str, impls: Dict[str, _Factory]) -> None:
+    """Extend the concrete backend set at runtime (experimental backends).
+
+    ``impls`` maps op name -> factory; every engine op must be covered so
+    resolution can never land on a hole."""
+    missing = set(OPS) - set(impls)
+    if missing:
+        raise ValueError(f"backend {name!r} missing impls for {sorted(missing)}")
+    if name not in CONCRETE_BACKENDS:
+        CONCRETE_BACKENDS.append(name)
+    for op, factory in impls.items():
+        _REGISTRY[(op, name)] = factory
+
+
+def registered_backends(op: str) -> Tuple[str, ...]:
+    """The backends with a registered implementation of ``op``."""
+    return tuple(b for (o, b) in _REGISTRY if o == op)
+
+
+def _pallas_flags(resolved: str) -> Tuple[str, bool]:
+    """(kernel variant, interpret?) for a pallas_* backend name."""
+    variant = "gpu" if resolved.startswith("pallas_gpu") else "tpu"
+    interpret = resolved in ("pallas_interpret", "pallas_gpu_interpret")
+    return variant, interpret
+
+
+_PALLAS = ("pallas_tpu", "pallas_interpret", "pallas_gpu",
+           "pallas_gpu_interpret")
+
+
+def _launch_kw(blocks: BlockConfig, variant: str) -> dict:
+    return {} if variant == "tpu" else {
+        "num_warps": blocks.num_warps or 4,
+        "num_stages": blocks.num_stages or 1,
+    }
+
+
+# -- lmme -------------------------------------------------------------------
+@register_impl("lmme", "xla_reference")
+def _lmme_ref(resolved: str, blocks: BlockConfig):
+    return lmme_reference
+
+
+@register_impl("lmme", *_PALLAS)
+def _lmme_pallas(resolved: str, blocks: BlockConfig):
+    variant, interpret = _pallas_flags(resolved)
+    kw = _launch_kw(blocks, variant)
 
     def f(a: Goom, b: Goom) -> Goom:
         return lmme_pallas(
             a, b,
-            block_n=blocks["block_n"], block_m=blocks["block_m"],
-            block_d=blocks["block_d"],
-            interpret=resolved == "pallas_interpret",
+            block_n=blocks.block_n, block_m=blocks.block_m,
+            block_d=blocks.block_d,
+            interpret=interpret, variant=variant, **kw,
         )
 
     return f
 
 
+# -- diagonal scan ----------------------------------------------------------
 def _broadcast_goom(g: Goom, shape) -> Goom:
     return Goom(jnp.broadcast_to(g.log_abs, shape),
                 jnp.broadcast_to(g.sign, shape))
 
 
-def _diagonal_scan(resolved: str, blocks: dict):
-    if resolved == "xla_reference":
-        def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
-            # match the kernel wrappers: a/b broadcast to a common shape
-            # (associative_scan itself requires identical operand shapes)
-            shape = jnp.broadcast_shapes(a.shape, b.shape)
-            x0b = None if x0 is None else _broadcast_goom(x0, shape[1:])
-            return _scan.diagonal_scan(
-                _broadcast_goom(a, shape), _broadcast_goom(b, shape), x0b)
+@register_impl("diagonal_scan", "xla_reference")
+def _diagonal_scan_ref(resolved: str, blocks: BlockConfig):
+    def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+        # match the kernel wrappers: a/b broadcast to a common shape
+        # (associative_scan itself requires identical operand shapes)
+        shape = jnp.broadcast_shapes(a.shape, b.shape)
+        x0b = None if x0 is None else _broadcast_goom(x0, shape[1:])
+        return _scan.diagonal_scan(
+            _broadcast_goom(a, shape), _broadcast_goom(b, shape), x0b)
 
-        return ref
+    return ref
+
+
+@register_impl("diagonal_scan", *_PALLAS)
+def _diagonal_scan_pallas(resolved: str, blocks: BlockConfig):
+    variant, interpret = _pallas_flags(resolved)
+    kw = _launch_kw(blocks, variant)
 
     def f(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
         return goom_scan_pallas(
             a, b, x0,
-            block_t=blocks["block_t"], block_c=blocks["block_c"],
-            interpret=resolved == "pallas_interpret",
+            block_t=blocks.block_t, block_c=blocks.block_c,
+            interpret=interpret, variant=variant, **kw,
         )
 
     return f
 
 
+# -- matrix scan ------------------------------------------------------------
 def _matrix_ref_chunked(a: Goom, b: Goom, x0: Optional[Goom], chunk: int) -> Goom:
     """Reference matrix scan, chunked over time for bounded memory.
 
     Within a chunk the full O(log L) associative scan runs; the entering
     state is carried sequentially across chunks (same recurrence algebra as
-    the fused kernel's VMEM carry, so results match the plain reference).
+    the fused kernel's carry, so results match the plain reference).
     """
     t = b.shape[0]
     batch = jnp.broadcast_shapes(a.shape[1:-2], b.shape[1:-2])
@@ -139,59 +250,90 @@ def _matrix_ref_chunked(a: Goom, b: Goom, x0: Optional[Goom], chunk: int) -> Goo
                 states_c.sign.reshape((t,) + states_c.shape[2:]))
 
 
-def _matrix_scan(resolved: str, blocks: dict):
-    if resolved == "xla_reference":
-        def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
-            return _matrix_ref_chunked(a, b, x0, blocks["block_t_matrix"])
+@register_impl("matrix_scan", "xla_reference")
+def _matrix_scan_ref(resolved: str, blocks: BlockConfig):
+    chunk = blocks.block_t or 128
 
-        return ref
+    def ref(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
+        return _matrix_ref_chunked(a, b, x0, chunk)
+
+    return ref
+
+
+@register_impl("matrix_scan", *_PALLAS)
+def _matrix_scan_pallas(resolved: str, blocks: BlockConfig):
+    variant, interpret = _pallas_flags(resolved)
+    kw = _launch_kw(blocks, variant)
 
     def f(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
         return matrix_scan_pallas(
             a, b, x0,
-            block_t=blocks["block_t_matrix"],
-            interpret=resolved == "pallas_interpret",
+            block_t=blocks.block_t,
+            interpret=interpret, variant=variant, **kw,
         )
 
     return f
 
 
-def _cumulative_lmme(resolved: str, blocks: dict):
-    if resolved == "xla_reference":
-        def ref(a: Goom) -> Goom:
-            return _scan.cumulative_lmme(a, matmul=lmme_reference)
+# -- cumulative lmme --------------------------------------------------------
+@register_impl("cumulative_lmme", "xla_reference")
+def _cumulative_lmme_ref(resolved: str, blocks: BlockConfig):
+    def ref(a: Goom) -> Goom:
+        return _scan.cumulative_lmme(a, matmul=lmme_reference)
 
-        return ref
+    return ref
+
+
+@register_impl("cumulative_lmme", *_PALLAS)
+def _cumulative_lmme_pallas(resolved: str, blocks: BlockConfig):
+    variant, interpret = _pallas_flags(resolved)
+    kw = _launch_kw(blocks, variant)
 
     def f(a: Goom) -> Goom:
         # A_t···A_1 == matrix recurrence with B = 0 and X_0 = I: the fused
-        # kernel computes it with zero extra machinery.
+        # kernel's zero-B path computes it without ever materializing a B
+        # operand (b=None below — only the (d, d) identity is built).
         d = a.shape[-1]
         eye = Goom(
             jnp.where(jnp.eye(d, dtype=bool), 0.0, -jnp.inf).astype(jnp.float32),
             jnp.ones((d, d), jnp.float32),
         )
-        zeros = Goom(jnp.full(a.shape, -jnp.inf, jnp.float32),
-                     jnp.ones(a.shape, jnp.float32))
         return matrix_scan_pallas(
-            a, zeros, eye,
-            block_t=blocks["block_t_matrix"],
-            interpret=resolved == "pallas_interpret",
+            a, None, eye,
+            block_t=blocks.block_t,
+            interpret=interpret, variant=variant, **kw,
         )
 
     return f
 
 
-_IMPLS = {
-    "lmme": _lmme,
-    "diagonal_scan": _diagonal_scan,
-    "matrix_scan": _matrix_scan,
-    "cumulative_lmme": _cumulative_lmme,
-}
+# ---------------------------------------------------------------------------
+# impl lookup
+# ---------------------------------------------------------------------------
+def _make(op: str, resolved: str, blocks: Optional[BlockConfig],
+          shapes: Optional[Tuple[int, ...]]):
+    if blocks is None:
+        from . import autotune  # lazy: autotune imports dispatch for timing
+
+        blocks = autotune.cached_blocks(op, resolved, shapes)
+    try:
+        factory = _REGISTRY[(op, resolved)]
+    except KeyError:
+        raise KeyError(
+            f"no implementation registered for op {op!r} on backend "
+            f"{resolved!r}; registered: {registered_backends(op)}") from None
+    return factory(resolved, blocks), blocks
 
 
-def get_impl(op: str, resolved: str, blocks: dict, shard=None):
+def get_impl(op: str, resolved: str, blocks: Optional[BlockConfig] = None,
+             shard=None, shapes: Optional[Tuple[int, ...]] = None):
     """Return the callable implementing ``op`` on the resolved backend.
+
+    ``blocks`` (a :class:`BlockConfig`) pins the tiling; ``None`` consults
+    the persisted autotune cache for ``(op, resolved, device_kind,
+    shape-bucket(shapes))`` and falls back to the static defaults — this is
+    how autotuned winners reach every call site without any caller naming
+    a block size.
 
     ``shard`` (a ``repro.kernels.sharded.ShardSpec`` or None) selects the
     sequence-sharded multi-device path: the local implementation above runs
@@ -199,7 +341,7 @@ def get_impl(op: str, resolved: str, blocks: dict, shard=None):
     combine stitching the time shards together.  ``lmme`` itself is not a
     scan, so it ignores ``shard`` (it is already local inside shard bodies).
     """
-    base = _IMPLS[op](resolved, blocks)
+    base, blocks = _make(op, resolved, blocks, shapes)
     if shard is None or op == "lmme":
         return base
     from . import sharded  # lazy: keeps single-device imports collective-free
@@ -210,9 +352,9 @@ def get_impl(op: str, resolved: str, blocks: dict, shard=None):
                 a, b, x0, spec=shard, local_diagonal_scan=base)
 
         return f
-    lmme_impl = _lmme(resolved, blocks)
+    lmme_impl, _ = _make("lmme", resolved, None, None)
     if op == "matrix_scan":
-        cum = _cumulative_lmme(resolved, blocks)
+        cum, _ = _make("cumulative_lmme", resolved, blocks, None)
 
         def f(a, b, x0=None):
             return sharded.seq_sharded_matrix_scan(

@@ -1,0 +1,112 @@
+"""Pallas-GPU kernel: chunked prefix scan of a diagonal GOOM recurrence.
+
+Same recurrence and combine algebra as the TPU kernel (``goom_scan.py``),
+reshaped for a GPU launch:
+
+  * the grid is ``(channel_tiles,)`` — one CTA per channel tile.  GPU grid
+    steps are *parallel* CTAs, so the sequential time dimension cannot be a
+    grid axis with a scratch carry; each CTA instead walks its time tiles
+    with an in-kernel ``fori_loop``, threading the ``(1, BC)`` state carry
+    through the loop in registers;
+  * time tiles are loaded/stored with ``pl.ds`` dynamic slices against the
+    full-length operand blocks; within a tile the inclusive scan is the
+    log2(BT)-depth associative scan of ``(A, B)`` compound pairs (pure
+    elementwise work, same ``_combine`` as the TPU kernel);
+  * ``num_warps`` / ``num_stages`` ride in via
+    ``plgpu.TritonCompilerParams``.
+
+Lowering: Pallas's Triton path on CUDA devices; ``interpret=True`` runs
+the identical body on CPU for CI parity (``pallas_gpu_interpret``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import triton as plgpu
+
+from .goom_scan import _combine, _lse2
+
+
+def _scan_gpu_kernel(
+    a_log_ref,
+    a_sign_ref,
+    b_log_ref,
+    b_sign_ref,
+    x0_log_ref,
+    x0_sign_ref,
+    x_log_ref,
+    x_sign_ref,
+    *,
+    t_tiles: int,
+    block_t: int,
+):
+    def body(ti, carry):
+        cl, cs = carry  # (1, BC) state entering this time tile
+        ts = pl.ds(ti * block_t, block_t)
+        al = a_log_ref[ts, :]  # (BT, BC)
+        asn = a_sign_ref[ts, :]
+        bl = b_log_ref[ts, :]
+        bsn = b_sign_ref[ts, :]
+
+        # In-tile inclusive scan of the (A, B) compound pairs.
+        a_star_l, a_star_s, b_star_l, b_star_s = jax.lax.associative_scan(
+            _combine, (al, asn, bl, bsn), axis=0
+        )
+
+        # Fold the carried state:  x = A* ⊙ x_carry ⊕ B*.
+        x_l, x_s = _lse2(a_star_l + cl, a_star_s * cs, b_star_l, b_star_s)
+        x_log_ref[ts, :] = x_l
+        x_sign_ref[ts, :] = x_s
+        return x_l[-1:], x_s[-1:]
+
+    jax.lax.fori_loop(
+        0, t_tiles, body, (x0_log_ref[...], x0_sign_ref[...]))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_t", "block_c", "num_warps", "num_stages",
+                     "interpret"),
+)
+def goom_scan_gpu_kernel_call(
+    a_log: jax.Array,
+    a_sign: jax.Array,
+    b_log: jax.Array,
+    b_sign: jax.Array,
+    x0_log: jax.Array,
+    x0_sign: jax.Array,
+    *,
+    block_t: int = 64,
+    block_c: int = 128,
+    num_warps: int = 4,
+    num_stages: int = 1,
+    interpret: bool = False,
+):
+    """Raw kernel entry: (T, C) planes + (1, C) initial state, all f32,
+    T % block_t == 0 and C % block_c == 0.  Returns (x_log, x_sign): (T, C).
+    """
+    t, c = a_log.shape
+    grid = (c // block_c,)
+
+    ab_spec = pl.BlockSpec((t, block_c), lambda ci: (0, ci))
+    x0_spec = pl.BlockSpec((1, block_c), lambda ci: (0, ci))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((t, c), jnp.float32),
+        jax.ShapeDtypeStruct((t, c), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_scan_gpu_kernel, t_tiles=t // block_t,
+                          block_t=block_t),
+        grid=grid,
+        in_specs=[ab_spec, ab_spec, ab_spec, ab_spec, x0_spec, x0_spec],
+        out_specs=[ab_spec, ab_spec],
+        out_shape=out_shape,
+        compiler_params=plgpu.TritonCompilerParams(
+            num_warps=num_warps, num_stages=num_stages),
+        interpret=interpret,
+    )(a_log, a_sign, b_log, b_sign, x0_log, x0_sign)

@@ -114,6 +114,90 @@ def _matrix_scan_kernel(
     carry_sign_ref[...] = x_s[-1]
 
 
+def _prod_combine(e, l):
+    """Prefix-product combine (earlier, later): A = A_later ∘ A_earlier."""
+    ea_l, ea_s = e
+    la_l, la_s = l
+    return _blmme(la_l, la_s, ea_l, ea_s)
+
+
+def _matrix_scan_kernel_zero_b(
+    a_log_ref,
+    a_sign_ref,
+    x0_log_ref,
+    x0_sign_ref,
+    x_log_ref,
+    x_sign_ref,
+    carry_log_ref,
+    carry_sign_ref,
+):
+    """Zero-B variant: with B ≡ 0 the recurrence collapses to prefix
+    products ``X_t = (A_t ∘ ⋯ ∘ A_1) ∘ X_0`` — only the transition half of
+    the compound is scanned, and no B operand exists in the launch.  This
+    is how ``cumulative_lmme`` rides the fused kernel."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_log_ref[...] = x0_log_ref[0, 0]
+        carry_sign_ref[...] = x0_sign_ref[0, 0]
+
+    al = a_log_ref[0]  # (BT, d, d)
+    asn = a_sign_ref[0]
+
+    a_star_l, a_star_s = jax.lax.associative_scan(
+        _prod_combine, (al, asn), axis=0
+    )
+
+    bt = al.shape[0]
+    cl = jnp.broadcast_to(carry_log_ref[...], (bt,) + carry_log_ref.shape)
+    cs = jnp.broadcast_to(carry_sign_ref[...], (bt,) + carry_sign_ref.shape)
+    x_l, x_s = _blmme(a_star_l, a_star_s, cl, cs)
+
+    x_log_ref[0] = x_l
+    x_sign_ref[0] = x_s
+    carry_log_ref[...] = x_l[-1]
+    carry_sign_ref[...] = x_s[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def matrix_scan_kernel_call_zero_b(
+    a_log: jax.Array,
+    a_sign: jax.Array,
+    x0_log: jax.Array,
+    x0_sign: jax.Array,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+):
+    """Zero-B kernel entry: a (G, T, d, d), x0 (G, 1, d, m), all f32,
+    T % block_t == 0.  Returns (x_log, x_sign): (G, T, d, m)."""
+    g, t, d, _ = a_log.shape
+    m = x0_log.shape[-1]
+    grid = (g, t // block_t)  # time minor => sequential carry
+
+    a_spec = pl.BlockSpec((1, block_t, d, d), lambda gi, ti: (gi, ti, 0, 0))
+    o_spec = pl.BlockSpec((1, block_t, d, m), lambda gi, ti: (gi, ti, 0, 0))
+    x0_spec = pl.BlockSpec((1, 1, d, m), lambda gi, ti: (gi, 0, 0, 0))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _matrix_scan_kernel_zero_b,
+        grid=grid,
+        in_specs=[a_spec, a_spec, x0_spec, x0_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((d, m), jnp.float32),
+            pltpu.VMEM((d, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_log, a_sign, x0_log, x0_sign)
+
+
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def matrix_scan_kernel_call(
     a_log: jax.Array,

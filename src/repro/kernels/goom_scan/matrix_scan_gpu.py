@@ -1,0 +1,198 @@
+"""Pallas-GPU kernel: fused chunked prefix scan of the matrix GOOM recurrence.
+
+Same PSCAN∘LMME math as the TPU kernel (``matrix_scan.py``) reshaped for a
+GPU launch:
+
+  * the grid is ``(batch,)`` — one CTA per independent recurrence.  GPU
+    grid steps are *parallel* CTAs, so the sequential time axis cannot be
+    a grid dimension with a scratch carry; each CTA walks its time tiles
+    with an in-kernel ``fori_loop``, threading the ``(d, m)`` state carry
+    through the loop in registers;
+  * within a tile the inclusive scan of ``(A, B)`` compound pairs is the
+    log2(BT)-depth associative scan whose combine is the batched LMME with
+    per-position detached row/column max rescaling (``_blmme``, shared with
+    the TPU kernel — the contraction lowers to ``dot_general`` on tensor
+    cores under Triton);
+  * the ``zero_b`` variant drops the B half of the compound entirely:
+    with B ≡ 0 the recurrence collapses to prefix products
+    ``X_t = (A_t ∘ ⋯ ∘ A_1) ∘ X_0`` — this is how ``cumulative_lmme``
+    rides the fused kernel without materializing a dense zero B tensor.
+
+Lowering: Pallas's Triton path on CUDA devices; ``interpret=True`` runs
+the identical body on CPU for CI parity (``pallas_gpu_interpret``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import triton as plgpu
+
+from .goom_scan import _lse2
+from .matrix_scan import _blmme, _mat_combine, _prod_combine
+
+
+def _matrix_scan_gpu_kernel(
+    a_log_ref,
+    a_sign_ref,
+    b_log_ref,
+    b_sign_ref,
+    x0_log_ref,
+    x0_sign_ref,
+    x_log_ref,
+    x_sign_ref,
+    *,
+    t_tiles: int,
+    block_t: int,
+):
+    def body(ti, carry):
+        cl, cs = carry  # (d, m) state entering this time tile
+        ts = pl.ds(ti * block_t, block_t)
+        al = a_log_ref[0, ts]  # (BT, d, d)
+        asn = a_sign_ref[0, ts]
+        bl = b_log_ref[0, ts]  # (BT, d, m)
+        bsn = b_sign_ref[0, ts]
+
+        a_star_l, a_star_s, b_star_l, b_star_s = jax.lax.associative_scan(
+            _mat_combine, (al, asn, bl, bsn), axis=0
+        )
+
+        # Fold the carried state:  X_t = A*_t ∘ X_carry ⊕ B*_t.
+        bt = al.shape[0]
+        clb = jnp.broadcast_to(cl, (bt,) + cl.shape)
+        csb = jnp.broadcast_to(cs, (bt,) + cs.shape)
+        ax_l, ax_s = _blmme(a_star_l, a_star_s, clb, csb)
+        x_l, x_s = _lse2(ax_l, ax_s, b_star_l, b_star_s)
+        x_log_ref[0, ts] = x_l
+        x_sign_ref[0, ts] = x_s
+        return x_l[-1], x_s[-1]
+
+    jax.lax.fori_loop(
+        0, t_tiles, body, (x0_log_ref[0, 0], x0_sign_ref[0, 0]))
+
+
+def _matrix_scan_gpu_kernel_zero_b(
+    a_log_ref,
+    a_sign_ref,
+    x0_log_ref,
+    x0_sign_ref,
+    x_log_ref,
+    x_sign_ref,
+    *,
+    t_tiles: int,
+    block_t: int,
+):
+    def body(ti, carry):
+        cl, cs = carry  # (d, m) state entering this time tile
+        ts = pl.ds(ti * block_t, block_t)
+        al = a_log_ref[0, ts]  # (BT, d, d)
+        asn = a_sign_ref[0, ts]
+
+        # With B ≡ 0 only the transition half of the compound survives:
+        # the in-tile scan is the prefix products A*_t = A_t ∘ ⋯ ∘ A_1.
+        a_star_l, a_star_s = jax.lax.associative_scan(
+            _prod_combine, (al, asn), axis=0
+        )
+
+        bt = al.shape[0]
+        clb = jnp.broadcast_to(cl, (bt,) + cl.shape)
+        csb = jnp.broadcast_to(cs, (bt,) + cs.shape)
+        x_l, x_s = _blmme(a_star_l, a_star_s, clb, csb)
+        x_log_ref[0, ts] = x_l
+        x_sign_ref[0, ts] = x_s
+        return x_l[-1], x_s[-1]
+
+    jax.lax.fori_loop(
+        0, t_tiles, body, (x0_log_ref[0, 0], x0_sign_ref[0, 0]))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_t", "num_warps", "num_stages", "interpret"),
+)
+def matrix_scan_gpu_kernel_call(
+    a_log: jax.Array,
+    a_sign: jax.Array,
+    b_log: jax.Array,
+    b_sign: jax.Array,
+    x0_log: jax.Array,
+    x0_sign: jax.Array,
+    *,
+    block_t: int = 32,
+    num_warps: int = 4,
+    num_stages: int = 1,
+    interpret: bool = False,
+):
+    """Raw kernel entry: a (G, T, d, d), b (G, T, d, m), x0 (G, 1, d, m),
+    all f32, T % block_t == 0.  Returns (x_log, x_sign): (G, T, d, m).
+    """
+    g, t, d, _ = a_log.shape
+    m = b_log.shape[-1]
+    grid = (g,)
+
+    a_spec = pl.BlockSpec((1, t, d, d), lambda gi: (gi, 0, 0, 0))
+    b_spec = pl.BlockSpec((1, t, d, m), lambda gi: (gi, 0, 0, 0))
+    x0_spec = pl.BlockSpec((1, 1, d, m), lambda gi: (gi, 0, 0, 0))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_matrix_scan_gpu_kernel, t_tiles=t // block_t,
+                          block_t=block_t),
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec, x0_spec, x0_spec],
+        out_specs=[b_spec, b_spec],
+        out_shape=out_shape,
+        compiler_params=plgpu.TritonCompilerParams(
+            num_warps=num_warps, num_stages=num_stages),
+        interpret=interpret,
+    )(a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_t", "num_warps", "num_stages", "interpret"),
+)
+def matrix_scan_gpu_kernel_call_zero_b(
+    a_log: jax.Array,
+    a_sign: jax.Array,
+    x0_log: jax.Array,
+    x0_sign: jax.Array,
+    *,
+    block_t: int = 32,
+    num_warps: int = 4,
+    num_stages: int = 1,
+    interpret: bool = False,
+):
+    """Zero-B kernel entry: a (G, T, d, d), x0 (G, 1, d, m), all f32,
+    T % block_t == 0.  Returns (x_log, x_sign): (G, T, d, m) — the prefix
+    products applied to x0.  No B operand exists anywhere in the launch.
+    """
+    g, t, d, _ = a_log.shape
+    m = x0_log.shape[-1]
+    grid = (g,)
+
+    a_spec = pl.BlockSpec((1, t, d, d), lambda gi: (gi, 0, 0, 0))
+    o_spec = pl.BlockSpec((1, t, d, m), lambda gi: (gi, 0, 0, 0))
+    x0_spec = pl.BlockSpec((1, 1, d, m), lambda gi: (gi, 0, 0, 0))
+
+    out_shape = [
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+        jax.ShapeDtypeStruct((g, t, d, m), jnp.float32),
+    ]
+    return pl.pallas_call(
+        functools.partial(_matrix_scan_gpu_kernel_zero_b,
+                          t_tiles=t // block_t, block_t=block_t),
+        grid=grid,
+        in_specs=[a_spec, a_spec, x0_spec, x0_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=out_shape,
+        compiler_params=plgpu.TritonCompilerParams(
+            num_warps=num_warps, num_stages=num_stages),
+        interpret=interpret,
+    )(a_log, a_sign, x0_log, x0_sign)

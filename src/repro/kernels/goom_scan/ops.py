@@ -12,9 +12,19 @@ Callers never see block-divisibility constraints: both wrappers
     corresponding ``core.scan`` reference on the saved inputs (the same
     mathematical function), making both kernels trainable.
 
-Backend choice (compiled TPU vs interpret) belongs to the dispatch layer
-(``repro.kernels.dispatch`` / ``repro.core.engine``) — these wrappers only
-take an explicit ``interpret`` flag.
+Each wrapper takes a ``variant``: ``"tpu"`` selects the sequential-grid
+kernels with VMEM scratch carries (``goom_scan.py`` / ``matrix_scan.py``),
+``"gpu"`` the parallel-CTA kernels with in-kernel time loops and register
+carries (``goom_scan_gpu.py`` / ``matrix_scan_gpu.py``, Triton lowering).
+
+``matrix_scan_pallas(a, None, x0)`` is the zero-B fast path: B ≡ 0
+collapses the recurrence to prefix products ``X_t = (A_t ∘ ⋯ ∘ A_1) ∘ X_0``
+and the launch carries no B operand at all — ``cumulative_lmme`` rides this
+instead of materializing a dense -inf tensor of ``a``'s shape.
+
+Backend choice (compiled vs interpret, tpu vs gpu) belongs to the dispatch
+layer (``repro.kernels.dispatch`` / ``repro.core.engine``) — these wrappers
+only take explicit ``variant`` / ``interpret`` flags.
 """
 
 from __future__ import annotations
@@ -26,11 +36,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.goom import Goom
+from repro.core.ops import lmme_reference
+from repro.core.scan import cumulative_lmme as _cum_ref
 from repro.core.scan import diagonal_scan as _diag_ref
 from repro.core.scan import matrix_scan as _matrix_ref
+from repro.kernels.blocks import _pow2_ceil
 
 from .goom_scan import goom_scan_kernel_call
-from .matrix_scan import matrix_scan_kernel_call
+from .goom_scan_gpu import goom_scan_gpu_kernel_call
+from .matrix_scan import matrix_scan_kernel_call, matrix_scan_kernel_call_zero_b
+from .matrix_scan_gpu import (
+    matrix_scan_gpu_kernel_call,
+    matrix_scan_gpu_kernel_call_zero_b,
+)
 
 __all__ = ["goom_scan_pallas", "matrix_scan_pallas"]
 
@@ -51,9 +69,15 @@ def _pad_axis(x: jax.Array, axis: int, target: int, fill: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 # diagonal scan:  x_t = a_t ⊙ x_{t-1} ⊕ b_t
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
 def _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                  block_t, block_c, interpret):
+                  block_t, block_c, num_warps, num_stages, interpret, variant):
+    if variant == "gpu":
+        return goom_scan_gpu_kernel_call(
+            a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+            block_t=block_t, block_c=block_c, num_warps=num_warps,
+            num_stages=num_stages, interpret=interpret,
+        )
     return goom_scan_kernel_call(
         a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
         block_t=block_t, block_c=block_c, interpret=interpret,
@@ -61,13 +85,15 @@ def _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
 
 
 def _dscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-               block_t, block_c, interpret):
+               block_t, block_c, num_warps, num_stages, interpret, variant):
     out = _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                        block_t, block_c, interpret)
+                        block_t, block_c, num_warps, num_stages, interpret,
+                        variant)
     return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
 
 
-def _dscan_bwd(block_t, block_c, interpret, res, cts):
+def _dscan_bwd(block_t, block_c, num_warps, num_stages, interpret, variant,
+               res, cts):
     a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
     g_log, _g_sign = cts  # sign planes are piecewise-constant: no cotangent
 
@@ -92,9 +118,12 @@ def goom_scan_pallas(
     *,
     block_t: int = 256,
     block_c: int = 512,
+    num_warps: int = 4,
+    num_stages: int = 1,
     interpret: bool = False,
+    variant: str = "tpu",
 ) -> Goom:
-    """Diagonal GOOM scan via the Pallas kernel; any (T, ...) shape.
+    """Diagonal GOOM scan via the Pallas kernels; any (T, ...) shape.
 
     ``a``/``b``: (T, ...) Gooms (broadcast to a common shape); ``x0``: (...)
     entering state, default exact zero.  Returns all states, (T, ...).
@@ -117,10 +146,15 @@ def goom_scan_pallas(
         xl = jnp.broadcast_to(x0.log_abs, trail).reshape(1, c).astype(jnp.float32)
         xs = jnp.broadcast_to(x0.sign, trail).reshape(1, c).astype(jnp.float32)
 
-    # Clamp block sizes to the (sublane/lane-aligned) problem, then pad.
-    lane = 8 if interpret else 128
-    bt = min(block_t, _ceil_mult(t, 8))
-    bc = min(block_c, _ceil_mult(c, lane))
+    # Clamp block sizes to the problem, then pad.  GPU tiles stay powers of
+    # two (Triton block constraint); TPU tiles align to sublanes/lanes.
+    if variant == "gpu":
+        bt = min(block_t, _pow2_ceil(t))
+        bc = min(block_c, _pow2_ceil(c))
+    else:
+        lane = 8 if interpret else 128
+        bt = min(block_t, _ceil_mult(t, 8))
+        bc = min(block_c, _ceil_mult(c, lane))
     tp, cp = _ceil_mult(t, bt), _ceil_mult(c, bc)
 
     # Time pads are identity elements (a=1, b=0); channel pads are exact
@@ -132,7 +166,8 @@ def goom_scan_pallas(
     xl = _pad_axis(xl, 1, cp, -jnp.inf)
     xs = _pad_axis(xs, 1, cp, 1.0)
 
-    x_log, x_sign = _dscan_planes(al, asn, bl, bsn, xl, xs, bt, bc, interpret)
+    x_log, x_sign = _dscan_planes(al, asn, bl, bsn, xl, xs, bt, bc,
+                                  num_warps, num_stages, interpret, variant)
     return Goom(x_log[:t, :c].reshape((t,) + trail),
                 x_sign[:t, :c].reshape((t,) + trail))
 
@@ -140,9 +175,15 @@ def goom_scan_pallas(
 # ---------------------------------------------------------------------------
 # matrix scan:  X_t = A_t X_{t-1} ⊕ B_t
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
 def _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                  block_t, interpret):
+                  block_t, num_warps, num_stages, interpret, variant):
+    if variant == "gpu":
+        return matrix_scan_gpu_kernel_call(
+            a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+            block_t=block_t, num_warps=num_warps, num_stages=num_stages,
+            interpret=interpret,
+        )
     return matrix_scan_kernel_call(
         a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
         block_t=block_t, interpret=interpret,
@@ -150,13 +191,13 @@ def _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
 
 
 def _mscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-               block_t, interpret):
+               block_t, num_warps, num_stages, interpret, variant):
     out = _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                        block_t, interpret)
+                        block_t, num_warps, num_stages, interpret, variant)
     return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
 
 
-def _mscan_bwd(block_t, interpret, res, cts):
+def _mscan_bwd(block_t, num_warps, num_stages, interpret, variant, res, cts):
     a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
     g_log, _g_sign = cts
 
@@ -178,18 +219,70 @@ def _mscan_bwd(block_t, interpret, res, cts):
 _mscan_planes.defvjp(_mscan_fwd, _mscan_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _mscan_planes_zero_b(a_log, a_sign, x0_log, x0_sign,
+                         block_t, num_warps, num_stages, interpret, variant):
+    if variant == "gpu":
+        return matrix_scan_gpu_kernel_call_zero_b(
+            a_log, a_sign, x0_log, x0_sign,
+            block_t=block_t, num_warps=num_warps, num_stages=num_stages,
+            interpret=interpret,
+        )
+    return matrix_scan_kernel_call_zero_b(
+        a_log, a_sign, x0_log, x0_sign,
+        block_t=block_t, interpret=interpret,
+    )
+
+
+def _mscan_zb_fwd(a_log, a_sign, x0_log, x0_sign,
+                  block_t, num_warps, num_stages, interpret, variant):
+    out = _mscan_planes_zero_b(a_log, a_sign, x0_log, x0_sign,
+                               block_t, num_warps, num_stages, interpret,
+                               variant)
+    return out, (a_log, a_sign, x0_log, x0_sign)
+
+
+def _mscan_zb_bwd(block_t, num_warps, num_stages, interpret, variant,
+                  res, cts):
+    a_log, a_sign, x0_log, x0_sign = res
+    g_log, _g_sign = cts
+
+    def f(al, xl):
+        # X_t = P_t ∘ x0 with P_t the prefix products — the B-free form of
+        # the recurrence, so the backward also never materializes a zero B.
+        prods = _cum_ref(
+            Goom(jnp.swapaxes(al, 0, 1), jnp.swapaxes(a_sign, 0, 1)),
+            matmul=lmme_reference,
+        )  # (T, G, d, d)
+        out = lmme_reference(prods, Goom(xl[:, 0], x0_sign[:, 0]))
+        return jnp.swapaxes(out.log_abs, 0, 1)
+
+    _, vjp = jax.vjp(f, a_log, x0_log)
+    d_al, d_xl = vjp(g_log)
+    return (d_al, jnp.zeros_like(a_sign), d_xl, jnp.zeros_like(x0_sign))
+
+
+_mscan_planes_zero_b.defvjp(_mscan_zb_fwd, _mscan_zb_bwd)
+
+
 def matrix_scan_pallas(
     a: Goom,
-    b: Goom,
+    b: Goom | None,
     x0: Goom | None = None,
     *,
     block_t: int = 128,
+    num_warps: int = 4,
+    num_stages: int = 1,
     interpret: bool = False,
+    variant: str = "tpu",
 ) -> Goom:
-    """Matrix GOOM scan via the fused PSCAN∘LMME Pallas kernel.
+    """Matrix GOOM scan via the fused PSCAN∘LMME Pallas kernels.
 
     ``a``: (T, ..., d, d) transitions; ``b``: (T, ..., d, m) biases (batch
-    dims broadcast); ``x0``: (..., d, m) entering state, default exact zero.
+    dims broadcast), or ``None`` for the zero-B fast path (B ≡ 0: the scan
+    degenerates to prefix products applied to ``x0``, and no B operand is
+    ever materialized — ``x0`` is then required, since it fixes ``m``);
+    ``x0``: (..., d, m) entering state, default exact zero.
     Returns all states, (T, ..., d, m).
 
     d and m are padded to sublane multiples (8) with exact zeros — a no-op
@@ -198,10 +291,16 @@ def matrix_scan_pallas(
     padded here: materializing 128-wide HBM planes for m=1 recurrences
     would be a 128x traffic blowup.
     """
+    if b is None and x0 is None:
+        raise ValueError(
+            "matrix_scan_pallas(a, None) needs x0: with B = 0 and X_0 = 0 "
+            "every state is exactly zero, and x0 is what fixes the state "
+            "width m")
     d = a.shape[-1]
-    m = b.shape[-1]
+    m = (b if b is not None else x0).shape[-1]
     t = a.shape[0]
-    batch = jnp.broadcast_shapes(a.shape[1:-2], b.shape[1:-2])
+    batch = jnp.broadcast_shapes(
+        a.shape[1:-2], b.shape[1:-2] if b is not None else ())
     g = math.prod(batch) if batch else 1
 
     def planes(x: jax.Array, last2) -> jax.Array:
@@ -210,7 +309,6 @@ def matrix_scan_pallas(
         return jnp.swapaxes(x, 0, 1).astype(jnp.float32)  # (G, T, *last2)
 
     al, asn = planes(a.log_abs, (d, d)), planes(a.sign, (d, d))
-    bl, bsn = planes(b.log_abs, (d, m)), planes(b.sign, (d, m))
     if x0 is None:
         xl = jnp.full((g, 1, d, m), -jnp.inf, jnp.float32)
         xs = jnp.ones((g, 1, d, m), jnp.float32)
@@ -222,8 +320,12 @@ def matrix_scan_pallas(
 
     # Pad features to sublane multiples with exact zeros, time to the block
     # size with identity elements (A = I, B = 0).
-    dp, mp = _ceil_mult(d, 8), _ceil_mult(m, 8)
-    bt = min(block_t, _ceil_mult(t, 8))
+    feat = 8
+    dp, mp = _ceil_mult(d, feat), _ceil_mult(m, feat)
+    if variant == "gpu":
+        bt = min(block_t, _pow2_ceil(t))
+    else:
+        bt = min(block_t, _ceil_mult(t, 8))
     tp = _ceil_mult(t, bt)
 
     def pad_feat(x, rows, cols, fill):
@@ -233,8 +335,6 @@ def matrix_scan_pallas(
     # so both of its feature axes get the row padding dp.
     al = pad_feat(al, dp, dp, -jnp.inf)
     asn = pad_feat(asn, dp, dp, 1.0)
-    bl = pad_feat(bl, dp, mp, -jnp.inf)
-    bsn = pad_feat(bsn, dp, mp, 1.0)
     xl = pad_feat(xl, dp, mp, -jnp.inf)
     xs = pad_feat(xs, dp, mp, 1.0)
 
@@ -243,10 +343,20 @@ def matrix_scan_pallas(
         a_pad_log = jnp.broadcast_to(eye_log, (g, tp - t, dp, dp))
         al = jnp.concatenate([al, a_pad_log.astype(jnp.float32)], axis=1)
         asn = _pad_axis(asn, 1, tp, 1.0)
-        bl = _pad_axis(bl, 1, tp, -jnp.inf)
-        bsn = _pad_axis(bsn, 1, tp, 1.0)
 
-    x_log, x_sign = _mscan_planes(al, asn, bl, bsn, xl, xs, bt, interpret)
+    if b is None:
+        x_log, x_sign = _mscan_planes_zero_b(
+            al, asn, xl, xs, bt, num_warps, num_stages, interpret, variant)
+    else:
+        bl, bsn = planes(b.log_abs, (d, m)), planes(b.sign, (d, m))
+        bl = pad_feat(bl, dp, mp, -jnp.inf)
+        bsn = pad_feat(bsn, dp, mp, 1.0)
+        if tp != t:
+            bl = _pad_axis(bl, 1, tp, -jnp.inf)
+            bsn = _pad_axis(bsn, 1, tp, 1.0)
+        x_log, x_sign = _mscan_planes(al, asn, bl, bsn, xl, xs, bt,
+                                      num_warps, num_stages, interpret,
+                                      variant)
     x_log = jnp.swapaxes(x_log[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
     x_sign = jnp.swapaxes(x_sign[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
     return Goom(x_log, x_sign)

@@ -19,12 +19,15 @@ from repro.core.goom import Goom
 from repro.core.ops import lmme_reference
 
 from .lmme import lmme_kernel_call
+from .lmme_gpu import lmme_gpu_kernel_call
 
 __all__ = ["lmme_pallas"]
 
 
 def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    from repro.kernels.dispatch import current_platform  # cached, cheap
+
+    return current_platform() != "tpu"
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, fill: float) -> jax.Array:
@@ -37,14 +40,17 @@ def _pad_to(x: jax.Array, axis: int, mult: int, fill: float) -> jax.Array:
     return jnp.pad(x, widths, constant_values=fill)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _lmme_planes(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _lmme_planes(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d,
+                 num_warps, num_stages, interpret, variant):
     return _lmme_fwd_impl(
-        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret
+        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d,
+        num_warps, num_stages, interpret, variant
     )
 
 
-def _lmme_fwd_impl(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+def _lmme_fwd_impl(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d,
+                   num_warps, num_stages, interpret, variant):
     n, d = a_log.shape[-2:]
     m = b_log.shape[-1]
     batch = a_log.shape[:-2]
@@ -59,23 +65,34 @@ def _lmme_fwd_impl(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, inte
     bl = _pad_to(_pad_to(flat(b_log), 1, block_d, -jnp.inf), 2, block_m, -jnp.inf)
     bsn = _pad_to(_pad_to(flat(b_sign), 1, block_d, 1.0), 2, block_m, 1.0)
 
-    out_log, out_sign = lmme_kernel_call(
-        al, asn, bl, bsn,
-        block_n=block_n, block_m=block_m, block_d=block_d, interpret=interpret,
-    )
+    if variant == "gpu":
+        out_log, out_sign = lmme_gpu_kernel_call(
+            al, asn, bl, bsn,
+            block_n=block_n, block_m=block_m, block_d=block_d,
+            num_warps=num_warps, num_stages=num_stages, interpret=interpret,
+        )
+    else:
+        out_log, out_sign = lmme_kernel_call(
+            al, asn, bl, bsn,
+            block_n=block_n, block_m=block_m, block_d=block_d,
+            interpret=interpret,
+        )
     out_log = out_log[:, :n, :m].reshape(batch + (n, m))
     out_sign = out_sign[:, :n, :m].reshape(batch + (n, m))
     return out_log, out_sign
 
 
-def _lmme_fwd(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret):
+def _lmme_fwd(a_log, a_sign, b_log, b_sign, block_n, block_m, block_d,
+              num_warps, num_stages, interpret, variant):
     out = _lmme_fwd_impl(
-        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d, interpret
+        a_log, a_sign, b_log, b_sign, block_n, block_m, block_d,
+        num_warps, num_stages, interpret, variant
     )
     return out, (a_log, a_sign, b_log, b_sign)
 
 
-def _lmme_bwd(block_n, block_m, block_d, interpret, res, cts):
+def _lmme_bwd(block_n, block_m, block_d, num_warps, num_stages, interpret,
+              variant, res, cts):
     a_log, a_sign, b_log, b_sign = res
     g_log, _g_sign = cts  # sign planes are piecewise-constant: no cotangent
 
@@ -97,12 +114,17 @@ def lmme_pallas(
     block_n: int = 128,
     block_m: int = 128,
     block_d: int = 128,
+    num_warps: int = 4,
+    num_stages: int = 2,
     interpret: bool | None = None,
+    variant: str = "tpu",
 ) -> Goom:
-    """LMME over GOOMs via the tiled online-rescaled Pallas kernel.
+    """LMME over GOOMs via the tiled online-rescaled Pallas kernels.
 
     ``a``: (..., n, d), ``b``: (..., d, m) — leading dims broadcast like
-    ``jnp.matmul``.  f32 planes only (TPU kernel dtype).
+    ``jnp.matmul``.  f32 planes only (kernel dtype).  ``variant`` selects
+    the TPU-shaped kernel (sequential K grid + VMEM scratch) or the
+    GPU-shaped one (in-kernel K loop + register carries, Triton lowering).
     """
     if interpret is None:
         interpret = _should_interpret()
@@ -115,11 +137,18 @@ def lmme_pallas(
     bsn = jnp.broadcast_to(b.sign, batch + b.shape[-2:]).astype(jnp.float32)
 
     # Clamp block sizes to (padded) dims to avoid huge pads for small inputs.
+    # GPU tiles keep every pl.dot dim >= 16 so tl.dot maps to tensor cores.
     n, d = al.shape[-2:]
     m = bl.shape[-1]
-    bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
-    bm = min(block_m, max(128, 1 << (m - 1).bit_length()))
-    bd = min(block_d, max(128, 1 << (d - 1).bit_length()))
+    if variant == "gpu":
+        bn = min(block_n, max(16, 1 << (n - 1).bit_length()))
+        bm = min(block_m, max(16, 1 << (m - 1).bit_length()))
+        bd = min(block_d, max(16, 1 << (d - 1).bit_length()))
+    else:
+        bn = min(block_n, max(8, 1 << (n - 1).bit_length()))
+        bm = min(block_m, max(128, 1 << (m - 1).bit_length()))
+        bd = min(block_d, max(128, 1 << (d - 1).bit_length()))
 
-    out_log, out_sign = _lmme_planes(al, asn, bl, bsn, bn, bm, bd, interpret)
+    out_log, out_sign = _lmme_planes(al, asn, bl, bsn, bn, bm, bd,
+                                     num_warps, num_stages, interpret, variant)
     return Goom(out_log, out_sign)

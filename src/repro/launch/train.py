@@ -61,9 +61,18 @@ def main(argv=None):
     ap.add_argument("--mesh", default="host", choices=["host", "production",
                                                        "production-multipod"])
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "pallas", "reference"],
+                    choices=["auto", "pallas", "reference",
+                             "pallas_tpu", "pallas_gpu", "pallas_interpret",
+                             "pallas_gpu_interpret", "xla_reference"],
                     help="scan-engine backend for all GOOM recurrences "
-                         "(repro.core.engine; auto = Pallas kernels on TPU)")
+                         "(repro.core.engine; auto = Pallas kernels on "
+                         "TPU/GPU, XLA elsewhere; concrete names force a "
+                         "path)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep per-op kernel tilings for the resolved "
+                         "backend before training and persist winners to "
+                         "the autotune cache (consumed automatically by "
+                         "every engine call; see docs/engine.md)")
     ap.add_argument("--seq-shards", type=int, default=1,
                     help="sequence-shard GOOM scans over the 'model' mesh "
                          "axis (maps the scan_seq logical axis there; the "
@@ -115,6 +124,18 @@ def main(argv=None):
 
     s_shard = state_shardings(rules, state_abs, p_shard)
     batch_sharding = rules.sharding((args.batch, args.seq_len), ["batch", None])
+
+    if args.autotune:
+        # Tune on the training shapes (time = seq len; the lmme/matrix dims
+        # track the model's head/state sizes only loosely — the cache is
+        # bucketed, so close-enough hints land on the same winners).
+        with engine.use_backend(args.backend):
+            engine.autotune(
+                shapes={"diagonal_scan": (args.seq_len, cfg.d_model),
+                        "matrix_scan": (args.seq_len, 16, 16),
+                        "cumulative_lmme": (args.seq_len, 16),
+                        "lmme": (args.seq_len, cfg.d_model, cfg.d_model)},
+                verbose=True)
 
     with mesh, use_rules(rules), engine.use_backend(args.backend):
         jit_step = jax.jit(step_fn, in_shardings=(s_shard, None),

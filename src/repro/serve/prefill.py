@@ -51,6 +51,7 @@ class ChunkedPrefill:
         backend: str = "auto",
         mesh=None,
         seq_shards="auto",
+        blocks=None,
     ):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -58,12 +59,12 @@ class ChunkedPrefill:
         self.chunk = chunk
 
         def chunk_step(params, tokens, caches, positions):
-            with _engine_scope(backend, mesh, seq_shards):
+            with _engine_scope(backend, mesh, seq_shards, blocks):
                 return model.prefill(params, tokens, caches,
                                      positions=positions)
 
         def tail_step(params, token, caches, index):
-            with _engine_scope(backend, mesh, seq_shards):
+            with _engine_scope(backend, mesh, seq_shards, blocks):
                 return model.decode_step(params, token, caches, index)
 
         self._chunk_step = jax.jit(chunk_step, donate_argnums=_donate((2,)))

@@ -88,6 +88,7 @@ class Engine:
         backend: str = "auto",
         mesh=None,
         seq_shards="auto",
+        blocks=None,
         eos_scan_every: int = 8,
     ):
         if model.cfg.frontend is not None:
@@ -107,10 +108,11 @@ class Engine:
         self.eos_scan_every = max(1, eos_scan_every)
 
         self._prefill = ChunkedPrefill(
-            model, chunk, backend=backend, mesh=mesh, seq_shards=seq_shards)
+            model, chunk, backend=backend, mesh=mesh, seq_shards=seq_shards,
+            blocks=blocks)
 
         def decode(params, tokens, caches, index):
-            with _engine_scope(backend, mesh, seq_shards):
+            with _engine_scope(backend, mesh, seq_shards, blocks):
                 logits, caches = model.decode_step(params, tokens, caches,
                                                    index)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -132,7 +134,7 @@ class Engine:
 
         def admit_chunk(params, slot_caches, caches, tokens, positions,
                         slot, tok_vec, pos_vec):
-            with _engine_scope(backend, mesh, seq_shards):
+            with _engine_scope(backend, mesh, seq_shards, blocks):
                 logits, caches = model.prefill(params, tokens, caches,
                                                positions=positions)
             return _finish_admit(logits, caches, positions[0, -1] + 1,
@@ -140,7 +142,7 @@ class Engine:
 
         def admit_tail(params, slot_caches, caches, token, index,
                        slot, tok_vec, pos_vec):
-            with _engine_scope(backend, mesh, seq_shards):
+            with _engine_scope(backend, mesh, seq_shards, blocks):
                 logits, caches = model.decode_step(params, token, caches,
                                                    index)
             return _finish_admit(logits, caches, index[0] + 1,

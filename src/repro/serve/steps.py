@@ -13,8 +13,9 @@ and outputs of the jitted function (donated in production)."""
 
 from __future__ import annotations
 
+import contextlib
 import weakref
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +33,35 @@ def abstract_caches(model: DecoderLM, batch: int, max_len: int):
     return jax.eval_shape(lambda: model.init_caches(batch, max_len))
 
 
-def _engine_scope(backend: str, mesh, seq_shards):
+def _engine_scope(backend: str, mesh, seq_shards, blocks=None):
+    stack = contextlib.ExitStack()
     if mesh is None:
         # forward seq_shards so an explicit count with no mesh raises in
         # the engine instead of silently serving single-device
-        return engine.use_backend(backend, seq_shards=seq_shards)
-    return engine.use_mesh(mesh, seq_shards=seq_shards, backend=backend)
+        stack.enter_context(engine.use_backend(backend, seq_shards=seq_shards))
+    else:
+        stack.enter_context(
+            engine.use_mesh(mesh, seq_shards=seq_shards, backend=backend))
+    if blocks:
+        # serving configs may pin autotuned tilings per op; the engine is
+        # the only layer that ever names a block size
+        stack.enter_context(engine.use_blocks(**dict(blocks)))
+    return stack
+
+
+def _freeze_blocks(blocks) -> Optional[Tuple]:
+    """Hashable form of a per-op blocks mapping (for the jit-step cache)."""
+    if not blocks:
+        return None
+    return tuple(sorted(
+        (op, tuple(sorted(dict(fields).items())))
+        for op, fields in dict(blocks).items()))
 
 
 def make_prefill_step(
     model: DecoderLM, *, backend: str = "auto", mesh=None,
     seq_shards="auto", fresh_caches: bool = False,
+    blocks: Optional[Mapping[str, Mapping[str, int]]] = None,
 ) -> Callable:
     """``backend`` selects the scan-engine backend for every GOOM recurrence
     in the model (see ``repro.core.engine``).  It is captured when the step
@@ -54,10 +73,15 @@ def make_prefill_step(
 
     ``fresh_caches`` (static) promises every call feeds empty caches —
     single-shot prefill then scales with the prompt length, not the cache
-    length (chunked serving prefill must leave it False)."""
+    length (chunked serving prefill must leave it False).
+
+    ``blocks`` (optional per-op block-config mapping, e.g.
+    ``{"matrix_scan": {"block_t": 64}}``) pins tilings for the step — the
+    serving analog of ``engine.use_blocks``; leave None to use the
+    autotune cache / defaults."""
 
     def prefill_step(params, tokens, caches, **kw):
-        with _engine_scope(backend, mesh, seq_shards):
+        with _engine_scope(backend, mesh, seq_shards, blocks):
             return model.prefill(params, tokens, caches,
                                  fresh_caches=fresh_caches, **kw)
 
@@ -67,16 +91,17 @@ def make_prefill_step(
 def make_decode_step(
     model: DecoderLM, *, sample: str = "greedy", backend: str = "auto",
     mesh=None, seq_shards="auto",
+    blocks: Optional[Mapping[str, Mapping[str, int]]] = None,
 ) -> Callable:
     """decode_step(params, token (B,1), caches, index) -> (next (B,1), caches)
 
     ``index`` is the absolute position of the incoming token (scalar);
-    ``backend``/``mesh`` as in ``make_prefill_step`` (decode scans are
-    length-1, so the sharded path falls back to local compute per device —
-    the knob exists so one serving config drives both steps)."""
+    ``backend``/``mesh``/``blocks`` as in ``make_prefill_step`` (decode
+    scans are length-1, so the sharded path falls back to local compute per
+    device — the knob exists so one serving config drives both steps)."""
 
     def decode_step(params, token, caches, index):
-        with _engine_scope(backend, mesh, seq_shards):
+        with _engine_scope(backend, mesh, seq_shards, blocks):
             logits, caches = model.decode_step(params, token, caches, index)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         return nxt, caches
@@ -110,27 +135,29 @@ def generate(
     backend: str = "auto",
     mesh=None,
     seq_shards="auto",
+    blocks: Optional[Mapping[str, Mapping[str, int]]] = None,
     **kw,
 ) -> jax.Array:
     """Greedy lockstep-batch generation driver (tests/examples).
 
     The jitted prefill/decode steps are cached on (model, backend, mesh,
-    seq_shards): repeated calls — sweeps, evaluation loops — hit the hot
-    executables.  For request-level batching use ``serve.Engine``."""
+    seq_shards, blocks): repeated calls — sweeps, evaluation loops — hit
+    the hot executables.  For request-level batching use ``serve.Engine``."""
     b, p = prompt.shape
     caches = model.init_caches(b, max_len)
-    key = (backend, mesh, seq_shards)
+    key = (backend, mesh, seq_shards, _freeze_blocks(blocks))
     prefill = _cached_jit(
         model, "prefill", key,
         lambda m: make_prefill_step(m, backend=backend, mesh=mesh,
-                                    seq_shards=seq_shards, fresh_caches=True))
+                                    seq_shards=seq_shards, fresh_caches=True,
+                                    blocks=blocks))
     logits, caches = prefill(params, prompt, caches, **kw)
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     step = _cached_jit(
         model, "decode", key,
         lambda m: make_decode_step(m, backend=backend, mesh=mesh,
-                                   seq_shards=seq_shards))
+                                   seq_shards=seq_shards, blocks=blocks))
     for i in range(n_tokens - 1):
         tok, caches = step(params, tok, caches, p + i)
         out.append(tok)

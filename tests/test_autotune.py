@@ -1,0 +1,138 @@
+"""Autotuner: sweep, JSON persistence, cache keying, get_impl consumption."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.goom import to_goom
+from repro.kernels import autotune, dispatch
+from repro.kernels.blocks import BlockConfig, default_blocks, shape_bucket
+
+
+@pytest.fixture
+def cache_file(tmp_path, monkeypatch):
+    """Point the process autotune cache at a fresh tmp file."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    autotune.load_cache(path, reload=True)
+    yield path
+    # drop the in-memory mirror so later tests reload from the real default
+    autotune._CACHE = None
+    autotune._CACHE_FILE = None
+
+
+def test_shape_bucket_pow2():
+    assert shape_bucket((3, 500, 1024)) == (4, 512, 1024)
+    assert shape_bucket((1,)) == (1,)
+
+
+def test_autotune_writes_cache_and_get_impl_consumes(cache_file):
+    shapes = (32, 4, 4)
+    report = autotune.autotune_op("matrix_scan", "xla_reference", shapes,
+                                  reps=1)
+    # the JSON file holds exactly the reported winner under the right key
+    with open(cache_file) as f:
+        data = json.load(f)
+    key = autotune.cache_key("matrix_scan", "xla_reference",
+                             shape_bucket(shapes))
+    assert report["key"] == key
+    assert autotune.device_kind() in key
+    assert data["entries"][key]["blocks"] == report["blocks"]
+
+    # cached_blocks (what get_impl consults when no override is active)
+    # returns the winner for bucketed shapes, defaults off-bucket
+    winner = autotune.cached_blocks("matrix_scan", "xla_reference", shapes)
+    assert winner.to_dict()["block_t"] == report["blocks"]["block_t"]
+    near = autotune.cached_blocks("matrix_scan", "xla_reference", (31, 3, 3))
+    assert near.block_t == winner.block_t  # same pow2 bucket
+    far = autotune.cached_blocks("matrix_scan", "xla_reference", (4096, 64, 64))
+    assert far == default_blocks("matrix_scan", "xla_reference")
+
+
+def test_engine_autotune_end_to_end(cache_file):
+    """engine.autotune() -> persisted winners -> engine op parity, with the
+    tuned blocks flowing through get_impl (no caller names a block size)."""
+    shapes = {"matrix_scan": (16, 4, 4)}
+    with engine.use_backend("pallas_interpret"):
+        reports = engine.autotune(("matrix_scan",), shapes=shapes, reps=1)
+    assert set(reports) == {"matrix_scan"}
+    assert reports["matrix_scan"]["blocks"]
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = to_goom(jax.random.normal(k1, (16, 4, 4)) * 0.5)
+    b = to_goom(jax.random.normal(k2, (16, 4, 2)) * 0.5)
+    with engine.use_backend("xla_reference"):
+        want = engine.matrix_scan(a, b)
+    with engine.use_backend("pallas_interpret"):
+        got = engine.matrix_scan(a, b)  # consumes the tuned cache entry
+    np.testing.assert_allclose(got.log_abs, want.log_abs, rtol=1e-4, atol=1e-3)
+
+
+def test_use_blocks_beats_cache(cache_file):
+    shapes = (16, 4, 4)
+    autotune.save_entry(
+        autotune.cache_key("matrix_scan", "pallas_interpret",
+                           shape_bucket(shapes)),
+        BlockConfig(block_t=128), 1.0, 1)
+    with engine.use_blocks(matrix_scan={"block_t": 8}):
+        cfg = engine.get_config()
+        blocks = engine._block_overrides(cfg, "matrix_scan",
+                                         "pallas_interpret", shapes)
+    assert blocks.block_t == 8  # explicit override wins field-by-field
+
+
+def test_explicit_cache_path_is_sticky_and_consumed(tmp_path, monkeypatch):
+    """Winners written via autotune(cache_path=...) must be consumed by
+    subsequent path-less reads (get_impl/cached_blocks) — the loaded path
+    sticks instead of silently reverting to the default location."""
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    autotune._CACHE = None
+    autotune._CACHE_FILE = None
+    custom = str(tmp_path / "elsewhere" / "tune.json")
+    try:
+        with engine.use_backend("xla_reference"):
+            engine.autotune(("matrix_scan",),
+                            shapes={"matrix_scan": (16, 4, 4)}, reps=1,
+                            cache_path=custom)
+        winner = autotune.cached_blocks("matrix_scan", "xla_reference",
+                                        (16, 4, 4))  # path-less read
+        assert winner.block_t == json.load(open(custom))["entries"][
+            autotune.cache_key("matrix_scan", "xla_reference",
+                               shape_bucket((16, 4, 4)))]["blocks"]["block_t"]
+    finally:
+        autotune._CACHE = None
+        autotune._CACHE_FILE = None
+
+
+def test_corrupt_cache_is_ignored(cache_file):
+    with open(cache_file, "w") as f:
+        f.write("{not json")
+    assert autotune.load_cache(cache_file, reload=True) == {}
+    # and cached_blocks silently falls back to defaults
+    assert autotune.cached_blocks("lmme", "pallas_tpu", (8, 8, 8)) == \
+        default_blocks("lmme", "pallas_tpu")
+
+
+def test_candidates_clip_to_problem():
+    for backend in dispatch.CONCRETE_BACKENDS:
+        cands = autotune.candidates_for("matrix_scan", backend, (8, 4, 4))
+        assert cands
+        tiles = sorted({c.block_t for c in cands})
+        # clipped to <= max(16, 2t); when the generator has no tile that
+        # small the single smallest candidate survives as the fallback
+        assert tiles[-1] <= 16 or len(tiles) == 1, tiles
+
+
+def test_autotune_every_op_runs_tiny(cache_file):
+    """Every op sweeps end-to-end on tiny shapes on the reference backend."""
+    shapes = {"lmme": (8, 8, 8), "diagonal_scan": (16, 8),
+              "matrix_scan": (8, 4, 4), "cumulative_lmme": (8, 4)}
+    with engine.use_backend("xla_reference"):
+        reports = engine.autotune(shapes=shapes, reps=1)
+    assert set(reports) == set(shapes)
+    entries = autotune.load_cache(reload=True)
+    assert len(entries) == 4

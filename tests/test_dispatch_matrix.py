@@ -1,0 +1,189 @@
+"""Dispatch resolution matrix + registry + platform-caching regressions.
+
+The full (requested backend x platform x dtype) table is exercised by
+passing ``platform`` explicitly — no JAX monkeypatching needed for the
+matrix itself.  The platform-caching satellite (resolution must not re-read
+``jax.default_backend()`` per call, and must be stable inside ``jax.jit``)
+is covered by monkeypatching ``jax.default_backend`` and counting calls.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.goom import to_goom
+from repro.kernels import dispatch
+from repro.kernels.blocks import OPS, BlockConfig, DEFAULTS, default_blocks
+
+
+# ---------------------------------------------------------------------------
+# the resolution matrix
+# ---------------------------------------------------------------------------
+MATRIX = [
+    # requested, platform, dtype, resolved
+    ("auto", "tpu", jnp.float32, "pallas_tpu"),
+    ("auto", "tpu", jnp.float64, "xla_reference"),
+    ("auto", "gpu", jnp.float32, "pallas_gpu"),
+    ("auto", "gpu", jnp.float64, "xla_reference"),
+    ("auto", "cpu", jnp.float32, "xla_reference"),
+    ("auto", "cpu", jnp.float64, "xla_reference"),
+    ("pallas", "tpu", jnp.float32, "pallas_tpu"),
+    ("pallas", "tpu", jnp.float64, "pallas_tpu"),
+    ("pallas", "gpu", jnp.float32, "pallas_gpu"),
+    ("pallas", "gpu", jnp.float64, "pallas_gpu"),
+    ("pallas", "cpu", jnp.float32, "pallas_interpret"),
+    ("reference", "tpu", jnp.float32, "xla_reference"),
+    ("reference", "gpu", jnp.float32, "xla_reference"),
+    ("reference", "cpu", jnp.float32, "xla_reference"),
+]
+# forced concrete names resolve to themselves on every platform
+MATRIX += [(concrete, platform, dtype, concrete)
+           for concrete in dispatch.CONCRETE_BACKENDS
+           for platform in ("cpu", "gpu", "tpu")
+           for dtype in (jnp.float32, jnp.float64)]
+
+
+@pytest.mark.parametrize("requested,platform,dtype,resolved", MATRIX)
+def test_resolution_matrix(requested, platform, dtype, resolved):
+    assert dispatch.resolve_backend(
+        requested, platform=platform, dtype=dtype) == resolved
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("mxu_go_brrr", platform="cpu")
+
+
+# ---------------------------------------------------------------------------
+# registry coverage
+# ---------------------------------------------------------------------------
+def test_registry_covers_every_op_backend_cell():
+    for op in OPS:
+        registered = dispatch.registered_backends(op)
+        for backend in dispatch.CONCRETE_BACKENDS:
+            assert backend in registered, (op, backend)
+            # the factory builds a callable from the default blocks
+            impl = dispatch.get_impl(op, backend)
+            assert callable(impl)
+
+
+def test_defaults_cover_every_op_backend_cell():
+    for op in OPS:
+        for backend in dispatch.CONCRETE_BACKENDS:
+            assert (op, backend) in DEFAULTS, (op, backend)
+
+
+def test_register_backend_requires_full_op_coverage():
+    with pytest.raises(ValueError, match="missing impls"):
+        dispatch.register_backend("half_a_backend", {"lmme": lambda r, b: None})
+
+
+def test_register_backend_extends_and_resolves():
+    impls = {op: (lambda r, b, _op=op: (lambda *a: _op)) for op in OPS}
+    name = "test_only_backend"
+    try:
+        dispatch.register_backend(name, impls)
+        assert dispatch.resolve_backend(name, platform="cpu") == name
+        DEFAULTS[("lmme", name)] = BlockConfig()
+        assert dispatch.get_impl("lmme", name)() == "lmme"
+    finally:
+        dispatch.CONCRETE_BACKENDS.remove(name)
+        for op in OPS:
+            dispatch._REGISTRY.pop((op, name), None)
+            DEFAULTS.pop((op, name), None)
+
+
+# ---------------------------------------------------------------------------
+# platform caching (satellite: no jax.default_backend() per call / in trace)
+# ---------------------------------------------------------------------------
+def test_platform_read_once_and_stable_under_jit(monkeypatch):
+    calls = {"n": 0}
+    real = jax.default_backend
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(jax, "default_backend", counting)
+    # current_platform is lru_cached: prime it, then the counter must stay
+    # frozen no matter how many resolutions run (including inside traces).
+    dispatch.current_platform()
+    calls["n"] = 0
+
+    resolved_inside = []
+
+    @jax.jit
+    def f(x):
+        resolved_inside.append(engine.resolved_backend())
+        return x + 1
+
+    with engine.use_backend("auto"):
+        for _ in range(3):
+            f(jnp.ones(2))
+        for _ in range(10):
+            engine.resolved_backend()
+    assert calls["n"] == 0, "resolution re-read jax.default_backend()"
+    assert len(set(resolved_inside)) == 1  # traced once, one stable answer
+
+
+def test_config_push_stamps_platform(monkeypatch):
+    with engine.use_backend("auto") as cfg:
+        assert cfg.platform == jax.default_backend()
+        # resolution uses the stamped platform even if the process default
+        # were to report something else afterwards
+        monkeypatch.setattr(jax, "default_backend", lambda: "not-a-platform")
+        assert engine.resolved_backend() in ("pallas_tpu", "pallas_gpu",
+                                             "xla_reference")
+
+
+def test_platform_override_resolves_without_hardware():
+    # a pushed config can pin the platform explicitly — this is how the
+    # resolution matrix is testable (and scripts can dry-run gpu dispatch)
+    with engine.use_backend("auto", platform="gpu"):
+        assert engine.resolved_backend() == "pallas_gpu"
+        assert engine.resolved_backend(jnp.float64) == "xla_reference"
+    with engine.use_backend("pallas", platform="tpu"):
+        assert engine.resolved_backend() == "pallas_tpu"
+
+
+# ---------------------------------------------------------------------------
+# block-config resolution (no caller outside kernels/ names a block size)
+# ---------------------------------------------------------------------------
+def test_use_blocks_overrides_win_over_defaults():
+    with engine.use_blocks(matrix_scan={"block_t": 16}):
+        cfg = engine.get_config()
+        blocks = engine._block_overrides(cfg, "matrix_scan",
+                                         "pallas_interpret", None)
+        assert blocks.block_t == 16
+        # untouched fields inherit the (op, backend) default
+        dflt = default_blocks("matrix_scan", "pallas_interpret")
+        assert blocks.num_warps == dflt.num_warps
+
+
+def test_use_blocks_backend_scoping():
+    with engine.use_blocks("pallas_gpu_interpret", lmme={"block_n": 32}):
+        cfg = engine.get_config()
+        gpu = engine._block_overrides(cfg, "lmme", "pallas_gpu_interpret", None)
+        assert gpu.block_n == 32
+        # other backends see no override at all (None -> cache/defaults)
+        assert engine._block_overrides(cfg, "lmme", "pallas_tpu", None) is None
+
+
+def test_use_blocks_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown engine op"):
+        with engine.use_blocks(not_an_op={"block_t": 8}):
+            pass
+
+
+def test_blocks_override_changes_nothing_numerically():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = to_goom(jax.random.normal(k1, (9, 4, 4)) * 0.5)
+    b = to_goom(jax.random.normal(k2, (9, 4, 2)) * 0.5)
+    with engine.use_backend("pallas_interpret"):
+        want = engine.matrix_scan(a, b)
+        with engine.use_blocks(matrix_scan={"block_t": 8}):
+            got = engine.matrix_scan(a, b)
+    np.testing.assert_allclose(got.log_abs, want.log_abs,
+                               rtol=1e-5, atol=1e-5)

@@ -36,6 +36,9 @@ def test_resolve_backend_table():
     if platform == "tpu":
         assert dispatch.resolve_backend("auto") == "pallas_tpu"
         assert dispatch.resolve_backend("pallas") == "pallas_tpu"
+    elif platform == "gpu":
+        assert dispatch.resolve_backend("auto") == "pallas_gpu"
+        assert dispatch.resolve_backend("pallas") == "pallas_gpu"
     else:
         assert dispatch.resolve_backend("auto") == "xla_reference"
         assert dispatch.resolve_backend("pallas") == "pallas_interpret"
@@ -49,9 +52,15 @@ def test_use_backend_scoped_and_nested():
     base = engine.get_config().backend
     with engine.use_backend("reference"):
         assert engine.get_config().backend == "reference"
-        with engine.use_backend("pallas", block_t=64):
+        with engine.use_backend("pallas"):
             assert engine.get_config().backend == "pallas"
-            assert engine.get_config().block_t == 64
+            with engine.use_blocks(matrix_scan={"block_t": 64}):
+                cfg = engine.get_config()
+                assert cfg.backend == "pallas"
+                blocks = engine._block_overrides(
+                    cfg, "matrix_scan", "pallas_interpret", None)
+                assert blocks.block_t == 64
+            assert engine.get_config().blocks == ()
         assert engine.get_config().backend == "reference"
     assert engine.get_config().backend == base
 

@@ -15,8 +15,10 @@
   scan_backends   — engine dispatch sweep: all four engine ops per backend
                     (reference / pallas / pallas_gpu_interpret by default),
                     with cross-backend parity checks.  ``--emit-bench``
-                    additionally writes results/BENCH_scan.json, a
-                    normalized per-op throughput table (CI artifact).
+                    additionally writes results/BENCH_scan.json: the
+                    normalized per-op throughput table plus a sequence-
+                    length sweep of kernel-vs-reference speedup ratios
+                    (``--preset smoke`` shrinks the sweep for CI).
   scan_sharded    — sequence-sharded scans across the device mesh: per-
                     shard-count timings of matrix_scan / cumulative_lmme /
                     diagonal_scan, with single-device parity checks.  On
@@ -247,15 +249,17 @@ def roofline():
 
 
 def scan_backends(backends=("reference", "pallas", "pallas_gpu_interpret"),
-                  emit_bench: bool = False):
+                  emit_bench: bool = False, preset: str = "full"):
     """All four engine ops per backend, with cross-backend parity.
 
     Default sweep: the XLA reference, whatever ``pallas`` resolves to on
     this host (compiled TPU/GPU kernels, interpret on CPU), and the
     GPU-shaped kernels under interpret (the CI parity column).  With
-    ``emit_bench`` a normalized per-op throughput table is written to
-    ``results/BENCH_scan.json`` (CI uploads it as the perf-trajectory
-    artifact)."""
+    ``emit_bench`` a normalized per-op throughput table plus a sequence-
+    length sweep (per-op kernel-vs-``xla_reference`` speedup ratios at
+    each T) is written to ``results/BENCH_scan.json`` (CI uploads it as
+    the perf-trajectory artifact).  ``preset="smoke"`` shrinks the sweep
+    to interpret-friendly lengths for CI."""
     import numpy as np
     from repro.core import engine
     from repro.core.goom import to_goom
@@ -309,14 +313,72 @@ def scan_backends(backends=("reference", "pallas", "pallas_gpu_interpret"),
                     got.log_abs, baseline["matrix"], rtol=1e-4, atol=1e-3)
             baseline["matrix"] = np.asarray(got.log_abs)
     if emit_bench:
+        sweep = _scan_seq_sweep(backends, preset)
         path = os.path.join(RESULTS_DIR, "BENCH_scan.json")
         with open(path, "w") as f:
-            json.dump({"schema": "bench_scan/v1",
+            json.dump({"schema": "bench_scan/v2",
                        "device_kind": jax.devices()[0].device_kind,
                        "platform": jax.default_backend(),
-                       "backends": out}, f, indent=1)
+                       "preset": preset,
+                       "backends": out,
+                       "seq_sweep": sweep}, f, indent=1)
         print(f"wrote {path}")
     return out
+
+
+def _scan_seq_sweep(backends, preset: str):
+    """Per-op speedup-vs-``xla_reference`` across a sequence-length sweep.
+
+    Every scan op is timed at each T under the reference backend and under
+    every requested kernel backend; the recorded ``speedup_vs_reference``
+    is ref_ms / kernel_ms (>1 = the kernel wins).  The smoke preset keeps
+    T small enough for interpret mode, where the kernel body runs one grid
+    step at a time in Python — those ratios track the perf *trajectory*
+    across PRs, not absolute kernel quality."""
+    from repro.core import engine
+    from repro.core.goom import to_goom
+
+    smoke = preset == "smoke"
+    ts = (64, 256, 1024) if smoke else (256, 4096, 65536)
+    c = 32 if smoke else 256
+    d, m = (4, 1) if smoke else (8, 1)
+    kernel_backends = [b for b in backends
+                       if b not in ("reference", "xla_reference")]
+
+    print("# seq sweep: per-op speedup vs xla_reference")
+    print("op,backend,resolved,T,ms,speedup_vs_reference")
+    sweep = {}
+    for t in ts:
+        key = jax.random.PRNGKey(t)
+        da = to_goom(jnp.exp(-jnp.abs(jax.random.normal(key, (t, c)))))
+        db = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, c)))
+        ma = to_goom(jax.random.normal(key, (t, d, d)) * 0.5)
+        mb = to_goom(jax.random.normal(jax.random.PRNGKey(2), (t, d, m)) * 0.5)
+        cells = [
+            ("diagonal_scan", engine.diagonal_scan, (da, db)),
+            ("matrix_scan", engine.matrix_scan, (ma, mb)),
+            ("cumulative_lmme", engine.cumulative_lmme, (ma,)),
+        ]
+        ref_ms = {}
+        with engine.use_backend("reference"):
+            for op, fn, args in cells:
+                ref_ms[op] = _bench(jax.jit(fn), *args) * 1e3
+                print(f"{op},reference,xla_reference,{t},"
+                      f"{ref_ms[op]:.2f},1.00")
+        per_t = {"reference_ms": ref_ms, "kernels": {}}
+        for backend in kernel_backends:
+            with engine.use_backend(backend):
+                resolved = engine.resolved_backend()
+                row = {"resolved": resolved}
+                for op, fn, args in cells:
+                    ms = _bench(jax.jit(fn), *args) * 1e3
+                    row[op] = {"ms": ms,
+                               "speedup_vs_reference": ref_ms[op] / ms}
+                    print(f"{op},{backend},{resolved},{t},{ms:.2f},"
+                          f"{ref_ms[op] / ms:.2f}")
+                per_t["kernels"][backend] = row
+        sweep[str(t)] = per_t
+    return sweep
 
 
 def scan_sharded():
@@ -500,7 +562,9 @@ def main() -> None:
                          "sweeps reference+pallas+pallas_gpu_interpret by "
                          "default)")
     ap.add_argument("--preset", choices=["full", "smoke"], default="full",
-                    help="serve_throughput problem size (smoke = CI shapes)")
+                    help="problem sizes for serve_throughput and the "
+                         "scan_backends --emit-bench seq sweep (smoke = "
+                         "CI/interpret shapes)")
     ap.add_argument("--emit-bench", action="store_true",
                     help="write results/BENCH_scan.json (normalized per-op "
                          "throughput from scan_backends; CI artifact)")
@@ -525,7 +589,7 @@ def main() -> None:
             results[name] = scan_backends(
                 tuple(args.backend
                       or ("reference", "pallas", "pallas_gpu_interpret")),
-                emit_bench=args.emit_bench)
+                emit_bench=args.emit_bench, preset=args.preset)
         elif name == "serve_throughput":
             results[name] = serve_throughput(
                 args.preset, (args.backend or ["auto"])[0])

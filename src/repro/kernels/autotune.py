@@ -1,30 +1,42 @@
 """Per-op block-config autotuner with a persisted JSON cache.
 
-Sweeps candidate tilings for an ``(op, backend)`` pair on a representative
-problem shape, times each end-to-end (jitted, ``block_until_ready``), and
-persists the winner keyed by
+Sweeps candidate launch configs for an ``(op, backend)`` pair on a
+representative problem shape — tile sizes *and*, for the GPU scan ops, the
+time-axis algorithm (``seq`` | ``tree`` | ``two_pass``) — times each
+end-to-end (jitted, ``block_until_ready``), and persists winners keyed by
 
-    ``op | backend | device_kind | shape-bucket``
+    ``op | backend | device_kind | shape-bucket | algo``
 
 where ``device_kind`` is ``jax.devices()[0].device_kind`` (e.g. ``cpu``,
-``NVIDIA A100-SXM4-40GB``, ``TPU v4``) and the shape bucket rounds every
+``NVIDIA A100-SXM4-40GB``, ``TPU v4``), the shape bucket rounds every
 problem dim up to a power of two (``kernels.blocks.shape_bucket``) so
-nearby shapes share a winner.
+nearby shapes share a winner, and ``algo`` is the scan algorithm the
+entry's blocks pin.  One sweep writes one entry per algorithm (the best
+blocks *given* that algorithm — inspectable per-variant results) plus the
+overall winner under the reserved algo slot ``best``, which is what
+``cached_blocks`` (and therefore ``dispatch.get_impl``) resolves.
 
 Cache file format (JSON, one object)::
 
     {
-      "version": 1,
+      "version": 2,
       "entries": {
-        "lmme|pallas_gpu|NVIDIA A100-SXM4-40GB|1024x512x1024": {
-          "blocks": {"block_n": 64, "block_m": 128, "block_d": 32,
-                     "num_warps": 8, "num_stages": 2},
+        "diagonal_scan|pallas_gpu|NVIDIA A100-SXM4-40GB|4096x512|best": {
+          "blocks": {"block_t": 64, "block_c": 128, "num_warps": 4,
+                     "num_stages": 1, "algo": "two_pass"},
           "ms": 0.41,
           "candidates": 12
         },
+        "diagonal_scan|pallas_gpu|NVIDIA A100-SXM4-40GB|4096x512|seq": {...},
         ...
       }
     }
+
+Version 1 caches (PR 4, no algo component) are *ignored wholesale* on
+load — the key format changed, so consulting stale entries would pin
+pre-tree-scan winners against the new algorithm axis.  There is nothing
+to migrate: a v1 file is simply treated as empty and overwritten by the
+next sweep.
 
 The cache is consulted by ``dispatch.get_impl`` whenever no explicit
 override is active (``cached_blocks``), so autotuned winners flow to every
@@ -52,7 +64,7 @@ __all__ = ["autotune_op", "cached_blocks", "candidates_for", "cache_path",
            "load_cache", "save_entry", "device_kind", "cache_key",
            "DEFAULT_SHAPES"]
 
-_VERSION = 1
+_VERSION = 2  # v2: 5-part keys with the scan-algo component; v1 is ignored
 
 # Representative problem shapes per op, used when the caller doesn't supply
 # any (engine.autotune() with no arguments): big enough that tiling matters,
@@ -78,9 +90,13 @@ def device_kind() -> str:
 
 
 def cache_key(op: str, backend: str, bucket: Tuple[int, ...],
-              kind: Optional[str] = None) -> str:
+              kind: Optional[str] = None, algo: str = "best") -> str:
+    """The 5-part v2 cache key.  ``algo`` is the scan algorithm the entry
+    pins: a concrete variant name, ``-`` for ops without an algorithm
+    axis, or the reserved slot ``best`` (the overall winner — what
+    resolution consults)."""
     kind = device_kind() if kind is None else kind
-    return f"{op}|{backend}|{kind}|{'x'.join(map(str, bucket))}"
+    return f"{op}|{backend}|{kind}|{'x'.join(map(str, bucket))}|{algo}"
 
 
 # ---------------------------------------------------------------------------
@@ -107,9 +123,13 @@ def load_cache(path: Optional[str] = None, *, reload: bool = False
         with open(path) as f:
             data = json.load(f)
         if isinstance(data, dict) and data.get("version") == _VERSION:
-            entries = dict(data.get("entries", {}))
+            # Belt and braces on top of the version gate: drop any entry
+            # whose key is not 5-part (a stale pre-algo key smuggled into a
+            # v2 file must not poison resolution).
+            entries = {k: v for k, v in dict(data.get("entries", {})).items()
+                       if k.count("|") == 4}
     except (OSError, ValueError):
-        pass  # missing or corrupt cache: start empty
+        pass  # missing, corrupt, or old-version cache: start empty
     _CACHE, _CACHE_FILE = entries, path
     return entries
 
@@ -185,20 +205,34 @@ def candidates_for(op: str, backend: str,
         t, c = shapes
         ts = _geom(32, 256) if gpu else [128, 256, 512]
         cs = _geom(64, 256) if gpu else [256, 512]
-        for bt in clip(ts, t):
-            for bc in clip(cs, c):
-                out.append(BlockConfig(block_t=bt, block_c=bc,
-                                       num_warps=4 if gpu else None,
-                                       num_stages=1 if gpu else None))
+        # GPU scans also sweep the time-axis algorithm; the tree scan uses
+        # the whole (pow2) sequence as its tile, so block_t is not a knob.
+        for algo in (("seq", "two_pass", "tree") if gpu else (None,)):
+            bts = clip(ts, t)[:1] if algo == "tree" else clip(ts, t)
+            for bt in bts:
+                for bc in clip(cs, c):
+                    out.append(BlockConfig(block_t=bt, block_c=bc, algo=algo,
+                                           num_warps=4 if gpu else None,
+                                           num_stages=1 if gpu else None))
     else:  # matrix_scan / cumulative_lmme (and the reference chunk length)
         t = shapes[0]
         ts = _geom(8, 64) if gpu else [32, 64, 128, 256]
-        for bt in clip(ts, t):
-            out.append(BlockConfig(block_t=bt,
-                                   num_warps=4 if gpu else None,
-                                   num_stages=1 if gpu else None))
+        for algo in (("seq", "two_pass", "tree") if gpu else (None,)):
+            bts = clip(ts, t)[:1] if algo == "tree" else clip(ts, t)
+            for bt in bts:
+                out.append(BlockConfig(block_t=bt, algo=algo,
+                                       num_warps=4 if gpu else None,
+                                       num_stages=1 if gpu else None))
     if interp:
-        out = out[:2]  # interpret mode is a correctness path; don't sweep it
+        # interpret mode is a correctness path, not a perf target: keep one
+        # candidate per algorithm (the parity sweep) instead of the full
+        # tile grid.
+        seen, kept = set(), []
+        for cand in out:
+            if cand.algo not in seen:
+                seen.add(cand.algo)
+                kept.append(cand)
+        out = kept
     return out
 
 
@@ -261,6 +295,7 @@ def autotune_op(
     cands = list(candidates or candidates_for(op, backend, shapes))
     table = []
     best: Tuple[float, BlockConfig] = (float("inf"), base)
+    best_by_algo: Dict[Optional[str], Tuple[float, BlockConfig]] = {}
     for cand in cands:
         blocks = merge(base, cand)
         fn = jax.jit(dispatch.get_impl(op, backend, blocks))
@@ -274,11 +309,21 @@ def autotune_op(
             print(f"  {op}/{backend} {blocks.to_dict()} -> {ms:.3f} ms")
         if ms < best[0]:
             best = (ms, blocks)
+        cur = best_by_algo.get(cand.algo)
+        if cur is None or ms < cur[0]:
+            best_by_algo[cand.algo] = (ms, blocks)
     if not any("ms" in row for row in table):
         raise RuntimeError(
             f"autotune: no candidate for ({op}, {backend}) ran; "
             f"errors: {[r.get('error') for r in table]}")
-    key = cache_key(op, backend, shape_bucket(shapes))
+    # Persist the best blocks *per algorithm* (inspectable variant-vs-variant
+    # results) plus the overall winner under the reserved "best" slot — the
+    # one ``cached_blocks`` resolves.
+    bucket = shape_bucket(shapes)
+    for algo, (ms_a, blk_a) in best_by_algo.items():
+        save_entry(cache_key(op, backend, bucket, algo=algo or "-"),
+                   blk_a, ms_a, len(cands), path=path)
+    key = cache_key(op, backend, bucket)
     save_entry(key, best[1], best[0], len(cands), path=path)
     return {"op": op, "backend": backend, "shapes": shapes, "key": key,
             "blocks": best[1].to_dict(), "ms": best[0], "table": table}

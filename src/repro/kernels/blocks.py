@@ -7,11 +7,16 @@ implementation understands.  Each op uses a subset of the fields:
   op                  fields                                   gpu extras
   ==================  =======================================  ==========
   lmme                block_n, block_m, block_d                num_warps,
-  diagonal_scan       block_t, block_c                         num_stages
-  matrix_scan         block_t
-  cumulative_lmme     block_t
+  diagonal_scan       block_t, block_c, algo                   num_stages
+  matrix_scan         block_t, algo
+  cumulative_lmme     block_t, algo
   xla_reference ops   block_t (matrix/cumulative ref chunking)
   ==================  =======================================  ==========
+
+``algo`` names the GPU scan ops' time-axis algorithm (``"seq"`` /
+``"tree"`` / ``"two_pass"``; ``None`` = auto by sequence length) — it is
+an autotunable launch knob like any tile size, swept and cached per
+``(op, backend, device_kind, shape-bucket)``.
 
 Defaults live in :data:`DEFAULTS`, keyed ``(op, backend)``.  Sizes are
 *hints*: the kernel wrappers clamp them to the (padded) problem, so small
@@ -19,7 +24,7 @@ shapes never over-pad.  Resolution precedence (the engine implements it):
 
   1. explicit ``engine.use_blocks()`` overrides,
   2. the persisted autotune cache (``kernels/autotune.py``), keyed
-     ``(op, backend, device_kind, shape-bucket)``,
+     ``(op, backend, device_kind, shape-bucket, algo)``,
   3. :data:`DEFAULTS`.
 
 Nothing outside ``kernels/`` names a block size — callers hand the engine
@@ -49,8 +54,10 @@ class BlockConfig:
     block_d: Optional[int] = None   # lmme: contraction tile
     num_warps: Optional[int] = None   # gpu (Triton) launch knobs
     num_stages: Optional[int] = None
+    algo: Optional[str] = None      # gpu scans: seq | tree | two_pass
+    #                                 (None = auto by sequence length)
 
-    def to_dict(self) -> Dict[str, int]:
+    def to_dict(self) -> Dict[str, object]:
         """The non-None fields, for JSON persistence / repr."""
         return {f.name: getattr(self, f.name)
                 for f in dataclasses.fields(self)

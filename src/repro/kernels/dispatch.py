@@ -207,6 +207,7 @@ def _diagonal_scan_pallas(resolved: str, blocks: BlockConfig):
         return goom_scan_pallas(
             a, b, x0,
             block_t=blocks.block_t, block_c=blocks.block_c,
+            algo=blocks.algo or "auto",
             interpret=interpret, variant=variant, **kw,
         )
 
@@ -268,7 +269,7 @@ def _matrix_scan_pallas(resolved: str, blocks: BlockConfig):
     def f(a: Goom, b: Goom, x0: Optional[Goom] = None) -> Goom:
         return matrix_scan_pallas(
             a, b, x0,
-            block_t=blocks.block_t,
+            block_t=blocks.block_t, algo=blocks.algo or "auto",
             interpret=interpret, variant=variant, **kw,
         )
 
@@ -300,7 +301,7 @@ def _cumulative_lmme_pallas(resolved: str, blocks: BlockConfig):
         )
         return matrix_scan_pallas(
             a, None, eye,
-            block_t=blocks.block_t,
+            block_t=blocks.block_t, algo=blocks.algo or "auto",
             interpret=interpret, variant=variant, **kw,
         )
 

@@ -17,6 +17,22 @@ kernels with VMEM scratch carries (``goom_scan.py`` / ``matrix_scan.py``),
 ``"gpu"`` the parallel-CTA kernels with in-kernel time loops and register
 carries (``goom_scan_gpu.py`` / ``matrix_scan_gpu.py``, Triton lowering).
 
+GPU wrappers additionally take an ``algo`` — the time-axis algorithm:
+
+  * ``"seq"``:     in-kernel ``fori_loop`` over time tiles (O(T) depth);
+  * ``"tree"``:    whole-T Blelloch up/down-sweep in one register tile,
+                   T padded to the next power of two with identities;
+  * ``"two_pass"``: per-tile tree scans + a grid-level carry stitch
+                   (O(log T) depth, two HBM round-trips);
+  * ``"auto"`` (default): ``seq`` when the padded T fits one ``block_t``
+    tile (a single in-tile log-depth scan — no sequential walk to remove),
+    ``two_pass`` otherwise.
+
+``algo`` is a static (nondiff) argument of the custom VJPs, so gradients
+flow through every variant via the same reference-autodiff backward.
+The TPU variant ignores ``algo`` (its sequential grid + VMEM carry *is*
+the TPU-shaped algorithm).
+
 ``matrix_scan_pallas(a, None, x0)`` is the zero-B fast path: B ≡ 0
 collapses the recurrence to prefix products ``X_t = (A_t ∘ ⋯ ∘ A_1) ∘ X_0``
 and the launch carries no B operand at all — ``cumulative_lmme`` rides this
@@ -43,18 +59,44 @@ from repro.core.scan import matrix_scan as _matrix_ref
 from repro.kernels.blocks import _pow2_ceil
 
 from .goom_scan import goom_scan_kernel_call
-from .goom_scan_gpu import goom_scan_gpu_kernel_call
+from .goom_scan_gpu import (
+    goom_scan_gpu_kernel_call,
+    goom_scan_gpu_tree_call,
+    goom_scan_gpu_two_pass_call,
+)
 from .matrix_scan import matrix_scan_kernel_call, matrix_scan_kernel_call_zero_b
 from .matrix_scan_gpu import (
     matrix_scan_gpu_kernel_call,
     matrix_scan_gpu_kernel_call_zero_b,
+    matrix_scan_gpu_tree_call,
+    matrix_scan_gpu_tree_call_zero_b,
+    matrix_scan_gpu_two_pass_call,
+    matrix_scan_gpu_two_pass_call_zero_b,
 )
 
-__all__ = ["goom_scan_pallas", "matrix_scan_pallas"]
+__all__ = ["goom_scan_pallas", "matrix_scan_pallas", "ALGOS"]
+
+# Time-axis algorithms of the GPU kernels ("auto" resolves to one of these).
+ALGOS = ("seq", "tree", "two_pass")
 
 
 def _ceil_mult(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _resolve_algo(algo, variant: str, t: int, block_t: int) -> str:
+    """Pick the time algorithm.  ``auto``: the sequential kernel when the
+    whole (pow2-padded) sequence fits one time tile — its single in-tile
+    scan is already log-depth — else the two-pass grid scan.  The TPU
+    variant has exactly one algorithm (sequential grid + VMEM carry)."""
+    if variant != "gpu":
+        return "seq"
+    if algo in (None, "auto"):
+        return "seq" if _pow2_ceil(t) <= block_t else "two_pass"
+    if algo not in ALGOS:
+        raise ValueError(f"unknown scan algo {algo!r}; one of "
+                         f"{ALGOS + ('auto',)}")
+    return algo
 
 
 def _pad_axis(x: jax.Array, axis: int, target: int, fill: float) -> jax.Array:
@@ -69,15 +111,24 @@ def _pad_axis(x: jax.Array, axis: int, target: int, fill: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 # diagonal scan:  x_t = a_t ⊙ x_{t-1} ⊕ b_t
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11, 12))
 def _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                  block_t, block_c, num_warps, num_stages, interpret, variant):
+                  block_t, block_c, num_warps, num_stages, interpret, variant,
+                  algo):
     if variant == "gpu":
+        kw = dict(num_warps=num_warps, num_stages=num_stages,
+                  interpret=interpret)
+        if algo == "tree":
+            return goom_scan_gpu_tree_call(
+                a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                block_c=block_c, **kw)
+        if algo == "two_pass":
+            return goom_scan_gpu_two_pass_call(
+                a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                block_t=block_t, block_c=block_c, **kw)
         return goom_scan_gpu_kernel_call(
             a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-            block_t=block_t, block_c=block_c, num_warps=num_warps,
-            num_stages=num_stages, interpret=interpret,
-        )
+            block_t=block_t, block_c=block_c, **kw)
     return goom_scan_kernel_call(
         a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
         block_t=block_t, block_c=block_c, interpret=interpret,
@@ -85,15 +136,16 @@ def _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
 
 
 def _dscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-               block_t, block_c, num_warps, num_stages, interpret, variant):
+               block_t, block_c, num_warps, num_stages, interpret, variant,
+               algo):
     out = _dscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
                         block_t, block_c, num_warps, num_stages, interpret,
-                        variant)
+                        variant, algo)
     return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
 
 
 def _dscan_bwd(block_t, block_c, num_warps, num_stages, interpret, variant,
-               res, cts):
+               algo, res, cts):
     a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
     g_log, _g_sign = cts  # sign planes are piecewise-constant: no cotangent
 
@@ -122,11 +174,13 @@ def goom_scan_pallas(
     num_stages: int = 1,
     interpret: bool = False,
     variant: str = "tpu",
+    algo: str | None = "auto",
 ) -> Goom:
     """Diagonal GOOM scan via the Pallas kernels; any (T, ...) shape.
 
     ``a``/``b``: (T, ...) Gooms (broadcast to a common shape); ``x0``: (...)
-    entering state, default exact zero.  Returns all states, (T, ...).
+    entering state, default exact zero.  ``algo`` picks the GPU time-axis
+    algorithm (see module docstring).  Returns all states, (T, ...).
     """
     shape = jnp.broadcast_shapes(a.shape, b.shape)
     t, trail = shape[0], shape[1:]
@@ -148,8 +202,11 @@ def goom_scan_pallas(
 
     # Clamp block sizes to the problem, then pad.  GPU tiles stay powers of
     # two (Triton block constraint); TPU tiles align to sublanes/lanes.
+    # The tree algorithm scans the whole sequence in one tile, so its time
+    # tile *is* the pow2-padded T (identity padding makes that exact).
+    algo = _resolve_algo(algo, variant, t, block_t)
     if variant == "gpu":
-        bt = min(block_t, _pow2_ceil(t))
+        bt = _pow2_ceil(t) if algo == "tree" else min(block_t, _pow2_ceil(t))
         bc = min(block_c, _pow2_ceil(c))
     else:
         lane = 8 if interpret else 128
@@ -167,7 +224,8 @@ def goom_scan_pallas(
     xs = _pad_axis(xs, 1, cp, 1.0)
 
     x_log, x_sign = _dscan_planes(al, asn, bl, bsn, xl, xs, bt, bc,
-                                  num_warps, num_stages, interpret, variant)
+                                  num_warps, num_stages, interpret, variant,
+                                  algo)
     return Goom(x_log[:t, :c].reshape((t,) + trail),
                 x_sign[:t, :c].reshape((t,) + trail))
 
@@ -175,15 +233,22 @@ def goom_scan_pallas(
 # ---------------------------------------------------------------------------
 # matrix scan:  X_t = A_t X_{t-1} ⊕ B_t
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10, 11))
 def _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                  block_t, num_warps, num_stages, interpret, variant):
+                  block_t, num_warps, num_stages, interpret, variant, algo):
     if variant == "gpu":
+        kw = dict(num_warps=num_warps, num_stages=num_stages,
+                  interpret=interpret)
+        if algo == "tree":
+            return matrix_scan_gpu_tree_call(
+                a_log, a_sign, b_log, b_sign, x0_log, x0_sign, **kw)
+        if algo == "two_pass":
+            return matrix_scan_gpu_two_pass_call(
+                a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
+                block_t=block_t, **kw)
         return matrix_scan_gpu_kernel_call(
             a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-            block_t=block_t, num_warps=num_warps, num_stages=num_stages,
-            interpret=interpret,
-        )
+            block_t=block_t, **kw)
     return matrix_scan_kernel_call(
         a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
         block_t=block_t, interpret=interpret,
@@ -191,13 +256,15 @@ def _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
 
 
 def _mscan_fwd(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-               block_t, num_warps, num_stages, interpret, variant):
+               block_t, num_warps, num_stages, interpret, variant, algo):
     out = _mscan_planes(a_log, a_sign, b_log, b_sign, x0_log, x0_sign,
-                        block_t, num_warps, num_stages, interpret, variant)
+                        block_t, num_warps, num_stages, interpret, variant,
+                        algo)
     return out, (a_log, a_sign, b_log, b_sign, x0_log, x0_sign)
 
 
-def _mscan_bwd(block_t, num_warps, num_stages, interpret, variant, res, cts):
+def _mscan_bwd(block_t, num_warps, num_stages, interpret, variant, algo,
+               res, cts):
     a_log, a_sign, b_log, b_sign, x0_log, x0_sign = res
     g_log, _g_sign = cts
 
@@ -219,15 +286,21 @@ def _mscan_bwd(block_t, num_warps, num_stages, interpret, variant, res, cts):
 _mscan_planes.defvjp(_mscan_fwd, _mscan_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def _mscan_planes_zero_b(a_log, a_sign, x0_log, x0_sign,
-                         block_t, num_warps, num_stages, interpret, variant):
+                         block_t, num_warps, num_stages, interpret, variant,
+                         algo):
     if variant == "gpu":
+        kw = dict(num_warps=num_warps, num_stages=num_stages,
+                  interpret=interpret)
+        if algo == "tree":
+            return matrix_scan_gpu_tree_call_zero_b(
+                a_log, a_sign, x0_log, x0_sign, **kw)
+        if algo == "two_pass":
+            return matrix_scan_gpu_two_pass_call_zero_b(
+                a_log, a_sign, x0_log, x0_sign, block_t=block_t, **kw)
         return matrix_scan_gpu_kernel_call_zero_b(
-            a_log, a_sign, x0_log, x0_sign,
-            block_t=block_t, num_warps=num_warps, num_stages=num_stages,
-            interpret=interpret,
-        )
+            a_log, a_sign, x0_log, x0_sign, block_t=block_t, **kw)
     return matrix_scan_kernel_call_zero_b(
         a_log, a_sign, x0_log, x0_sign,
         block_t=block_t, interpret=interpret,
@@ -235,14 +308,14 @@ def _mscan_planes_zero_b(a_log, a_sign, x0_log, x0_sign,
 
 
 def _mscan_zb_fwd(a_log, a_sign, x0_log, x0_sign,
-                  block_t, num_warps, num_stages, interpret, variant):
+                  block_t, num_warps, num_stages, interpret, variant, algo):
     out = _mscan_planes_zero_b(a_log, a_sign, x0_log, x0_sign,
                                block_t, num_warps, num_stages, interpret,
-                               variant)
+                               variant, algo)
     return out, (a_log, a_sign, x0_log, x0_sign)
 
 
-def _mscan_zb_bwd(block_t, num_warps, num_stages, interpret, variant,
+def _mscan_zb_bwd(block_t, num_warps, num_stages, interpret, variant, algo,
                   res, cts):
     a_log, a_sign, x0_log, x0_sign = res
     g_log, _g_sign = cts
@@ -275,6 +348,7 @@ def matrix_scan_pallas(
     num_stages: int = 1,
     interpret: bool = False,
     variant: str = "tpu",
+    algo: str | None = "auto",
 ) -> Goom:
     """Matrix GOOM scan via the fused PSCAN∘LMME Pallas kernels.
 
@@ -322,8 +396,9 @@ def matrix_scan_pallas(
     # size with identity elements (A = I, B = 0).
     feat = 8
     dp, mp = _ceil_mult(d, feat), _ceil_mult(m, feat)
+    algo = _resolve_algo(algo, variant, t, block_t)
     if variant == "gpu":
-        bt = min(block_t, _pow2_ceil(t))
+        bt = _pow2_ceil(t) if algo == "tree" else min(block_t, _pow2_ceil(t))
     else:
         bt = min(block_t, _ceil_mult(t, 8))
     tp = _ceil_mult(t, bt)
@@ -346,7 +421,8 @@ def matrix_scan_pallas(
 
     if b is None:
         x_log, x_sign = _mscan_planes_zero_b(
-            al, asn, xl, xs, bt, num_warps, num_stages, interpret, variant)
+            al, asn, xl, xs, bt, num_warps, num_stages, interpret, variant,
+            algo)
     else:
         bl, bsn = planes(b.log_abs, (d, m)), planes(b.sign, (d, m))
         bl = pad_feat(bl, dp, mp, -jnp.inf)
@@ -356,7 +432,7 @@ def matrix_scan_pallas(
             bsn = _pad_axis(bsn, 1, tp, 1.0)
         x_log, x_sign = _mscan_planes(al, asn, bl, bsn, xl, xs, bt,
                                       num_warps, num_stages, interpret,
-                                      variant)
+                                      variant, algo)
     x_log = jnp.swapaxes(x_log[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
     x_sign = jnp.swapaxes(x_sign[:, :t, :d, :m], 0, 1).reshape((t,) + batch + (d, m))
     return Goom(x_log, x_sign)

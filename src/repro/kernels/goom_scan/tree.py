@@ -1,0 +1,119 @@
+"""Work-efficient Blelloch tree scan over compound scan elements.
+
+The building block of the log-depth GPU scan kernels: an *inclusive*
+up/down-sweep prefix scan along axis 0 of a tuple of planes, expressed as
+pure reshapes/slices/stacks so the identical code lowers under Pallas's
+Triton path (``tl.reshape`` / ``tl.interleave`` on registers) and runs
+under ``interpret=True`` for CI.
+
+Why not ``jax.lax.associative_scan``?  Two reasons:
+
+  * the down-sweep here is *seeded with the monoid identity element*, which
+    is what makes identity padding of non-power-of-two sequences exact by
+    construction (the pads combine with real prefixes as no-ops at every
+    level, not just at the leaves);
+  * the per-level structure is explicit, which is what the overflow
+    argument in ``docs/DESIGN.md`` is about: every ``combine`` call at
+    every level goes through the shared ``_lse2`` / ``_blmme`` detached
+    running-max rescaling, so each of the log2(n) levels renormalizes
+    before magnitudes can compound.
+
+Work: exactly ``2(n-1)`` combines (n-1 up-sweep, n-1 down-sweep) — the
+Blelloch work-efficient bound — at depth ``2·log2(n)``.  A sequential walk
+does ``n-1`` combines at depth ``n-1``: the tree trades ≤2x work for the
+T -> log T critical path the paper's parallel-scan claim rests on.
+
+Axis-0 length must be a power of two; callers pad with identity elements
+(``kernels/goom_scan/ops.py`` does this for the kernels).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tree_scan", "diag_identity", "mat_identity", "prod_identity"]
+
+_Planes = Tuple[jax.Array, ...]
+
+
+def _split_pairs(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(2m, ...) -> the (m, ...) earlier / later element of each pair."""
+    m = x.shape[0] // 2
+    p = x.reshape((m, 2) + x.shape[1:])
+    return p[:, 0], p[:, 1]
+
+
+def _interleave(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Two (m, ...) arrays -> (2m, ...): a0, b0, a1, b1, ..."""
+    return jnp.stack([a, b], axis=1).reshape((2 * a.shape[0],) + a.shape[1:])
+
+
+def tree_scan(combine: Callable[[_Planes, _Planes], _Planes],
+              elems: _Planes, identity: _Planes) -> _Planes:
+    """Inclusive Blelloch up/down-sweep scan of ``elems`` along axis 0.
+
+    ``combine(earlier, later)`` is the monoid product (same convention as
+    ``jax.lax.associative_scan`` operands here: each argument is a tuple of
+    planes).  ``identity`` is a tuple of ``(1, ...)`` planes holding the
+    monoid identity element — it seeds the down-sweep, so identity-padded
+    tails are exact no-ops at every tree level.
+
+    Axis-0 length must be a power of two (static).
+    """
+    n = elems[0].shape[0]
+    if n & (n - 1):
+        raise ValueError(f"tree_scan needs a power-of-two length, got {n}")
+    if n == 1:
+        return elems
+
+    # Up-sweep: pairwise reduce.  ``earlier_halves[k]`` keeps each pair's
+    # earlier element at level k — the down-sweep needs it to fill in the
+    # prefixes the reduction skipped.
+    earlier_halves = []
+    cur = elems
+    while cur[0].shape[0] > 1:
+        pairs = tuple(_split_pairs(x) for x in cur)
+        earlier = tuple(p[0] for p in pairs)
+        later = tuple(p[1] for p in pairs)
+        earlier_halves.append(earlier)
+        cur = combine(earlier, later)
+
+    # Down-sweep: ``incl`` is the inclusive scan of the pair-sums one level
+    # up; pair-end positions inherit it directly, pair-start positions get
+    # exclusive-prefix (identity-shifted) ∘ own element.
+    incl = cur  # (1, ...): the total
+    for earlier in reversed(earlier_halves):
+        excl = tuple(jnp.concatenate([i, x[:-1]], axis=0)
+                     for i, x in zip(identity, incl))
+        start_incl = combine(excl, earlier)
+        incl = tuple(_interleave(s, i) for s, i in zip(start_incl, incl))
+    return incl
+
+
+# ---------------------------------------------------------------------------
+# identity elements, as (1, ...) f32 planes (log-magnitude, sign layout)
+# ---------------------------------------------------------------------------
+def diag_identity(c: int) -> _Planes:
+    """Diagonal (A, B) compound identity: A = 1 (log 0), B = 0 (log -inf)."""
+    z = jnp.zeros((1, c), jnp.float32)
+    one = jnp.ones((1, c), jnp.float32)
+    return (z, one, jnp.full((1, c), -jnp.inf, jnp.float32), one)
+
+
+def mat_identity(d: int, m: int) -> _Planes:
+    """Matrix (A, B) compound identity: A = I (0-diag / -inf), B = -inf."""
+    eye_log = jnp.where(jnp.eye(d, dtype=bool), 0.0,
+                        -jnp.inf).astype(jnp.float32)[None]
+    return (eye_log, jnp.ones((1, d, d), jnp.float32),
+            jnp.full((1, d, m), -jnp.inf, jnp.float32),
+            jnp.ones((1, d, m), jnp.float32))
+
+
+def prod_identity(d: int) -> _Planes:
+    """Prefix-product (zero-B) identity: just A = I."""
+    eye_log = jnp.where(jnp.eye(d, dtype=bool), 0.0,
+                        -jnp.inf).astype(jnp.float32)[None]
+    return (eye_log, jnp.ones((1, d, d), jnp.float32))

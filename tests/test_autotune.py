@@ -135,4 +135,88 @@ def test_autotune_every_op_runs_tiny(cache_file):
         reports = engine.autotune(shapes=shapes, reps=1)
     assert set(reports) == set(shapes)
     entries = autotune.load_cache(reload=True)
-    assert len(entries) == 4
+    # per op: one per-algo entry ("-": reference ops have no algorithm
+    # axis) plus the overall winner under the reserved "best" slot
+    assert len(entries) == 8
+    for op in shapes:
+        key = autotune.cache_key(op, "xla_reference",
+                                 shape_bucket(shapes[op]))
+        assert key in entries
+        assert key.replace("|best", "|-") in entries
+
+
+# ---------------------------------------------------------------------------
+# v2 cache keys: the scan-algorithm component
+# ---------------------------------------------------------------------------
+def test_cache_key_is_five_part_with_algo():
+    key = autotune.cache_key("diagonal_scan", "pallas_gpu", (4096, 512),
+                             kind="gpu0")
+    assert key == "diagonal_scan|pallas_gpu|gpu0|4096x512|best"
+    assert autotune.cache_key("diagonal_scan", "pallas_gpu", (4096, 512),
+                              kind="gpu0", algo="tree").endswith("|tree")
+
+
+def test_v1_cache_is_ignored_wholesale(cache_file):
+    """A PR-4-era (version 1, 4-part keys) cache file must be treated as
+    empty — stale pre-algo winners must not poison v2 resolution."""
+    v1_key = "matrix_scan|pallas_gpu_interpret|cpu|8x4x4"
+    with open(cache_file, "w") as f:
+        json.dump({"version": 1,
+                   "entries": {v1_key: {"blocks": {"block_t": 999},
+                                        "ms": 0.1, "candidates": 1}}}, f)
+    assert autotune.load_cache(cache_file, reload=True) == {}
+    blocks = autotune.cached_blocks("matrix_scan", "pallas_gpu_interpret",
+                                    (8, 4, 4))
+    assert blocks == default_blocks("matrix_scan", "pallas_gpu_interpret")
+
+
+def test_stale_four_part_key_in_v2_file_is_dropped(cache_file):
+    """Even inside a version-2 file, a 4-part key (no algo component) is
+    filtered out on load."""
+    good = autotune.cache_key("matrix_scan", "xla_reference", (8, 4, 4))
+    with open(cache_file, "w") as f:
+        json.dump({"version": 2, "entries": {
+            "matrix_scan|xla_reference|cpu|8x4x4": {"blocks": {}},
+            good: {"blocks": {"block_t": 16}, "ms": 0.1, "candidates": 1},
+        }}, f)
+    entries = autotune.load_cache(cache_file, reload=True)
+    assert list(entries) == [good]
+
+
+def test_gpu_scan_candidates_sweep_algo():
+    """GPU scan ops enumerate all three time-axis algorithms; the tree
+    variant pins a single block_t (its tile is the whole pow2 sequence)."""
+    for op, shapes in (("diagonal_scan", (256, 64)),
+                       ("matrix_scan", (64, 4, 4)),
+                       ("cumulative_lmme", (64, 4))):
+        cands = autotune.candidates_for(op, "pallas_gpu", shapes)
+        algos = {c.algo for c in cands}
+        assert algos == {"seq", "tree", "two_pass"}, (op, algos)
+        assert len({c.block_t for c in cands if c.algo == "tree"}) == 1
+        # non-GPU backends have no algorithm axis
+        ref = autotune.candidates_for(op, "xla_reference", shapes)
+        assert {c.algo for c in ref} == {None}
+
+
+def test_autotune_sweeps_algo_and_persists_per_algo_entries(cache_file):
+    """engine.autotune() on the GPU-interpret backend times every
+    algorithm and persists one entry per algo plus the ``best`` slot the
+    resolution path consumes."""
+    shapes = (16, 4)
+    report = autotune.autotune_op("cumulative_lmme", "pallas_gpu_interpret",
+                                  shapes, reps=1)
+    entries = autotune.load_cache(reload=True)
+    bucket = shape_bucket(shapes)
+    for algo in ("seq", "tree", "two_pass", "best"):
+        key = autotune.cache_key("cumulative_lmme", "pallas_gpu_interpret",
+                                 bucket, algo=algo)
+        assert key in entries, algo
+    best_key = autotune.cache_key("cumulative_lmme", "pallas_gpu_interpret",
+                                  bucket)
+    assert report["key"] == best_key
+    assert entries[best_key]["blocks"].get("algo") in ("seq", "tree",
+                                                       "two_pass")
+    # the winner flows into resolution for bucketed shapes
+    blocks = autotune.cached_blocks("cumulative_lmme", "pallas_gpu_interpret",
+                                    shapes)
+    assert blocks.algo == entries[best_key]["blocks"]["algo"]

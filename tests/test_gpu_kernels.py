@@ -248,3 +248,198 @@ def test_matrix_scan_zero_b_matches_explicit_zero_b():
         np.testing.assert_allclose(got.log_abs, want.log_abs,
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_array_equal(got.sign, want.sign)
+
+
+# ---------------------------------------------------------------------------
+# time-parallel algorithms: tree scan and two-pass grid scan
+# ---------------------------------------------------------------------------
+# The GPU scans expose three time-axis algorithms (seq | tree | two_pass);
+# the sequential kernel is the in-repo parity oracle and xla_reference the
+# external one.  The tree scan pads T to a power of two with identity
+# elements (A = I / diag 1, B = 0), so odd T and T < block_t are the
+# regression shapes.
+
+ALGOS = ("tree", "two_pass")
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("t", [7, 16, 23, 70])  # odd, pow2, odd, multi-tile
+def test_diagonal_scan_algo_parity_e200(algo, t):
+    from repro.kernels.goom_scan.ops import goom_scan_pallas
+
+    c = 5
+    k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(KEY, 7), 4)
+    shifts = 200.0 * jax.random.choice(k4, jnp.array([-1.0, 1.0]), (t, 1))
+    a0 = to_goom(jax.random.normal(k1, (t, c)))
+    a = Goom(a0.log_abs + shifts, a0.sign)  # per-step magnitudes e^±200
+    b = to_goom(jax.random.normal(k2, (t, c)))
+    x0 = to_goom(jax.random.normal(k3, (c,)))
+
+    def run(alg):
+        return goom_scan_pallas(a, b, x0, block_t=16, block_c=4,
+                                interpret=True, variant="gpu", algo=alg)
+
+    with engine.use_backend("xla_reference"):
+        want = engine.diagonal_scan(a, b, x0)
+    seq, got = run("seq"), run(algo)
+    for oracle in (want, seq):
+        rel = np.abs(np.asarray(got.log_abs) - np.asarray(oracle.log_abs)) / \
+            np.maximum(np.abs(np.asarray(oracle.log_abs)), 1.0)
+        assert float(rel.max()) <= 1e-4, (algo, t)
+        np.testing.assert_array_equal(got.sign, oracle.sign)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_diagonal_scan_algo_gradients(algo):
+    from repro.kernels.goom_scan.ops import goom_scan_pallas
+
+    t, c = 10, 3
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, 8), 3)
+    a = to_goom(jax.random.normal(k1, (t, c)) * 0.6)
+    b = to_goom(jax.random.normal(k2, (t, c)))
+    x0 = to_goom(jax.random.normal(k3, (c,)))
+
+    def loss(al, bl, alg):
+        out = goom_scan_pallas(Goom(al, a.sign), Goom(bl, b.sign), x0,
+                               block_t=4, block_c=4, interpret=True,
+                               variant="gpu", algo=alg)
+        return jnp.sum(out.log_abs)
+
+    gk = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs, algo)
+    gs = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs, "seq")
+    for x, y in zip(gk, gs):
+        assert np.all(np.isfinite(x))
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("t", [3, 13, 40])  # < one tile, odd, multi-tile
+def test_matrix_scan_algo_parity_e200(algo, t):
+    from repro.kernels.goom_scan.ops import matrix_scan_pallas
+
+    d, m = 4, 2
+    k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(KEY, 9), 4)
+    shifts = 200.0 * jax.random.choice(k4, jnp.array([-1.0, 1.0]), (t, 1, 1))
+    a0 = to_goom(jnp.abs(jax.random.normal(k1, (t, d, d))) + 0.1)
+    a = Goom(a0.log_abs + shifts, a0.sign)
+    b = to_goom(jnp.abs(jax.random.normal(k2, (t, d, m))) + 0.1)
+    x0 = to_goom(jnp.abs(jax.random.normal(k3, (d, m))) + 0.1)
+
+    def run(alg):
+        return matrix_scan_pallas(a, b, x0, block_t=8, interpret=True,
+                                  variant="gpu", algo=alg)
+
+    with engine.use_backend("xla_reference"):
+        want = engine.matrix_scan(a, b, x0)
+    assert float(jnp.max(jnp.abs(want.log_abs))) > 200.0
+    seq, got = run("seq"), run(algo)
+    for oracle in (want, seq):
+        rel = np.abs(np.asarray(got.log_abs) - np.asarray(oracle.log_abs)) / \
+            np.maximum(np.abs(np.asarray(oracle.log_abs)), 1.0)
+        assert float(rel.max()) <= 1e-4, (algo, t)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_matrix_scan_algo_gradients(algo):
+    from repro.kernels.goom_scan.ops import matrix_scan_pallas
+
+    t, d, m = 10, 3, 2
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, 10), 3)
+    a = to_goom(jax.random.normal(k1, (t, d, d)) * 0.6)
+    b = to_goom(jax.random.normal(k2, (t, d, m)) * 0.6)
+    x0 = to_goom(jax.random.normal(k3, (d, m)))
+
+    def loss(al, bl, alg):
+        out = matrix_scan_pallas(Goom(al, a.sign), Goom(bl, b.sign), x0,
+                                 block_t=4, interpret=True, variant="gpu",
+                                 algo=alg)
+        return jnp.sum(jnp.where(jnp.isfinite(out.log_abs), out.log_abs, 0.0))
+
+    gk = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs, algo)
+    gs = jax.grad(loss, argnums=(0, 1))(a.log_abs, b.log_abs, "seq")
+    for x, y in zip(gk, gs):
+        assert np.all(np.isfinite(x))
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("t", [5, 11, 24])
+def test_cumulative_lmme_algo_parity_and_grads(algo, t):
+    """The zero-B fast path under tree/two_pass: values at e±200 + grads."""
+    from repro.kernels.goom_scan.ops import matrix_scan_pallas
+
+    d = 3
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 11))
+    shifts = 200.0 * jax.random.choice(k2, jnp.array([-1.0, 1.0]), (t, 1, 1))
+    a0 = to_goom(jnp.abs(jax.random.normal(k1, (t, d, d))) + 0.1)
+    a = Goom(a0.log_abs + shifts, a0.sign)
+    eye = Goom(jnp.where(jnp.eye(d, dtype=bool), 0.0, -jnp.inf),
+               jnp.ones((d, d)))
+
+    def run(al, alg):
+        return matrix_scan_pallas(Goom(al, a.sign), None, eye, block_t=8,
+                                  interpret=True, variant="gpu", algo=alg)
+
+    with engine.use_backend("xla_reference"):
+        want = engine.cumulative_lmme(a)
+    seq, got = run(a.log_abs, "seq"), run(a.log_abs, algo)
+    for oracle in (want, seq):
+        rel = np.abs(np.asarray(got.log_abs) - np.asarray(oracle.log_abs)) / \
+            np.maximum(np.abs(np.asarray(oracle.log_abs)), 1.0)
+        assert float(rel.max()) <= 1e-4, (algo, t)
+
+    def loss(al, alg):
+        out = run(al, alg)
+        return jnp.sum(jnp.where(jnp.isfinite(out.log_abs), out.log_abs, 0.0))
+
+    gk = jax.grad(loss)(a.log_abs, algo)
+    gs = jax.grad(loss)(a.log_abs, "seq")
+    assert np.all(np.isfinite(gk))
+    np.testing.assert_allclose(gk, gs, rtol=1e-4, atol=1e-3)
+
+
+def test_tree_scan_identity_padding_non_pow2():
+    """Identity-element padding regression: non-power-of-two and shorter-
+    than-one-tile T must round-trip the tree scan exactly (padding steps
+    are A = identity, B = 0 — no-ops under the recurrence)."""
+    from repro.kernels.goom_scan.ops import goom_scan_pallas, matrix_scan_pallas
+
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, 12), 3)
+    for t in (1, 2, 3, 5, 6, 12):  # all non-pow2 pad; 1/2/3 < any tile
+        a = to_goom(jax.random.normal(k1, (t, 4)) * 0.6)
+        b = to_goom(jax.random.normal(k2, (t, 4)))
+        with engine.use_backend("xla_reference"):
+            want = engine.diagonal_scan(a, b, None)
+        got = goom_scan_pallas(a, b, None, block_t=8, block_c=4,
+                               interpret=True, variant="gpu", algo="tree")
+        np.testing.assert_allclose(got.log_abs, want.log_abs,
+                                   rtol=2e-4, atol=2e-4, err_msg=str(t))
+        np.testing.assert_array_equal(got.sign, want.sign)
+
+        ma = to_goom(jax.random.normal(k3, (t, 3, 3)) * 0.6)
+        with engine.use_backend("xla_reference"):
+            wantm = engine.cumulative_lmme(ma)
+        eye = Goom(jnp.where(jnp.eye(3, dtype=bool), 0.0, -jnp.inf),
+                   jnp.ones((3, 3)))
+        gotm = matrix_scan_pallas(ma, None, eye, block_t=8, interpret=True,
+                                  variant="gpu", algo="tree")
+        np.testing.assert_allclose(gotm.log_abs, wantm.log_abs,
+                                   rtol=2e-4, atol=2e-4, err_msg=str(t))
+
+
+def test_algo_flows_through_engine_use_blocks():
+    """engine.use_blocks(algo=...) reaches the GPU kernels: every algo
+    override yields reference-parity results through the engine."""
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 13))
+    a = to_goom(jax.random.normal(k1, (20, 6)) * 0.6)
+    b = to_goom(jax.random.normal(k2, (20, 6)))
+    with engine.use_backend("xla_reference"):
+        want = engine.diagonal_scan(a, b, None)
+    for algo in ("seq", "tree", "two_pass"):
+        with engine.use_backend("pallas_gpu_interpret"), \
+                engine.use_blocks(diagonal_scan={"algo": algo,
+                                                 "block_t": 8, "block_c": 8}):
+            got = engine.diagonal_scan(a, b, None)
+        np.testing.assert_allclose(got.log_abs, want.log_abs,
+                                   rtol=2e-4, atol=2e-4, err_msg=algo)
+        np.testing.assert_array_equal(got.sign, want.sign)

@@ -27,6 +27,11 @@
   serve_throughput — continuous-batching serve engine vs the legacy
                     static-batch path: requests/s both ways plus p50/p99
                     decode-step latency (``--preset smoke`` for CI shapes).
+  serve_api       — the full HTTP front door under concurrent streaming
+                    clients (more clients than slots, 429-retry loop):
+                    aggregate tok/s, ttft and request-latency percentiles
+                    from /status, rejection counts (``--preset smoke``
+                    for CI shapes).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
        [--preset {full,smoke}] [--emit-bench]
@@ -536,6 +541,100 @@ def serve_throughput(preset: str = "full", backend: str = "auto"):
     return out
 
 
+def serve_api(preset: str = "full", backend: str = "auto"):
+    """End-to-end HTTP serving: concurrent streaming clients over SSE.
+
+    Measures the whole stack — socket, SSE framing, gateway thread hop,
+    engine step loop — not just the engine: aggregate client-observed
+    tokens/s, ttft / request-latency percentiles from ``/status``, and
+    admission-control behavior (clients outnumber the waiting-queue
+    watermark, so the 429-retry path is exercised under load).  Timings
+    are informational (no assertions); conformance lives in
+    tests/test_serve_api.py.
+    """
+    import threading
+
+    from repro.serve.api import BackgroundServer, Gateway, build_engine
+    from repro.serve.api import client as api_client
+
+    smoke = preset == "smoke"
+    arch = "goom-rnn-124m"
+    if smoke:
+        n_clients, max_slots, p_len, gen, max_queue = 6, 2, 4, 24, 2
+    else:
+        n_clients, max_slots, p_len, gen, max_queue = 24, 4, 8, 96, 8
+    page_len = p_len + gen
+
+    eng, cfg = build_engine(arch, smoke=True, max_slots=max_slots,
+                            page_len=page_len, chunk=4, backend=backend)
+    gateway = Gateway(eng, max_queue=max_queue)
+    srv = BackgroundServer(gateway).start()
+    print(f"# serve_api[{preset}]: {arch}(smoke), {n_clients} streaming "
+          f"clients, {max_slots} slots x page {page_len}, "
+          f"queue watermark {max_queue}")
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(7), (n_clients, p_len), 0, cfg.vocab)
+
+    def client(i, out):
+        toks, retries = [], 0
+        while True:
+            try:
+                for ev in api_client.stream_completion(
+                        srv.host, srv.port,
+                        {"prompt": list(map(int, prompts[i])),
+                         "max_tokens": gen}):
+                    toks.append(ev["choices"][0]["token"])
+                out[i] = (len(toks), retries)
+                return
+            except api_client.RetryLater as e:
+                retries += 1
+                time.sleep(min(e.retry_after, 0.5))
+
+    try:
+        # warm the jitted paths off the clock
+        api_client.completion(srv.host, srv.port,
+                              {"prompt": [1, 2, 3], "max_tokens": 2})
+        out = [None] * n_clients
+        threads = [threading.Thread(target=client, args=(i, out),
+                                    daemon=True) for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        snap = api_client.get_status(srv.host, srv.port)
+    finally:
+        srv.stop()
+
+    n_tok = sum(n for n, _ in out)
+    n_retries = sum(r for _, r in out)
+    lat = snap["latency_ms"]
+    res = {
+        "clients": n_clients,
+        "tokens_total": n_tok,
+        "client_tok_per_s": n_tok / wall,
+        "wall_s": wall,
+        "retries_429": n_retries,
+        "rejected": snap["requests"]["rejected"],
+        "ttft_ms": lat["ttft"],
+        "request_ms": lat["request"],
+        "decode_step_ms": lat["decode_step"],
+    }
+    assert all(n == gen for n, _ in out)  # every client got its budget
+    print("metric,value")
+    print(f"client_tokens_per_s,{res['client_tok_per_s']:.1f}")
+    print(f"wall_s,{wall:.2f}")
+    print(f"retries_429,{n_retries} (server rejected {res['rejected']})")
+    print(f"ttft_ms,p50 {lat['ttft']['p50']:.0f} / p99 {lat['ttft']['p99']:.0f}")
+    print(f"request_ms,p50 {lat['request']['p50']:.0f} / "
+          f"p99 {lat['request']['p99']:.0f}")
+    print(f"decode_step_ms,p50 {lat['decode_step']['p50']:.1f} / "
+          f"p99 {lat['decode_step']['p99']:.1f}")
+    return res
+
+
 ALL = {
     "table1_range": table1_range,
     "fig1_chains": fig1_chains,
@@ -547,6 +646,7 @@ ALL = {
     "scan_backends": scan_backends,
     "scan_sharded": scan_sharded,
     "serve_throughput": serve_throughput,
+    "serve_api": serve_api,
 }
 
 
@@ -590,8 +690,8 @@ def main() -> None:
                 tuple(args.backend
                       or ("reference", "pallas", "pallas_gpu_interpret")),
                 emit_bench=args.emit_bench, preset=args.preset)
-        elif name == "serve_throughput":
-            results[name] = serve_throughput(
+        elif name in ("serve_throughput", "serve_api"):
+            results[name] = ALL[name](
                 args.preset, (args.backend or ["auto"])[0])
         else:
             with engine.use_backend((args.backend or ["auto"])[0]):

@@ -1,16 +1,20 @@
-"""Serving demo: the continuous-batching engine, then the legacy path.
+"""Serving demo: concurrent HTTP clients against the streaming front door.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --tokens 32
 
-Part 1 drives ``repro.serve.Engine``: requests with different prompt and
-generation lengths are admitted into slots mid-flight (chunked prefill →
-slot write → shared decode step), finished sequences release their slots
-to waiting requests.  Part 2 runs the legacy lockstep static batch
-(``serve.steps.generate``) for comparison — the path the decode_32k /
-long_500k dry-run cells lower for the production mesh.
+Part 1 boots the full serving stack in-process — ``serve.Engine`` on its
+own thread behind the asyncio HTTP server (``repro.serve.api``) — and
+drives it the way production traffic would: more concurrent streaming
+clients than decode slots, token-by-token SSE consumption, and a
+``/status`` snapshot at the end.  The same server is what
+``python -m repro.serve.api`` exposes standalone.  Part 2 runs the
+legacy lockstep static batch (``serve.steps.generate``) for comparison —
+the path the decode_32k / long_500k dry-run cells lower for the
+production mesh.
 """
 
 import argparse
+import threading
 import time
 
 import jax
@@ -18,7 +22,27 @@ import jax
 from repro.configs import get_config
 from repro.models.common import unzip
 from repro.models.model import DecoderLM
-from repro.serve import Engine, Request, generate, slot_cache_bytes
+from repro.serve import Engine, generate, slot_cache_bytes
+from repro.serve.api import BackgroundServer, Gateway
+from repro.serve.api import client as api
+
+
+def _client(host, port, i, prompt, n_tokens, out, t_start):
+    """One streaming client: consume SSE tokens, retry on 429."""
+    while True:
+        try:
+            toks = []
+            for event in api.stream_completion(
+                    host, port, {"prompt": prompt, "max_tokens": n_tokens}):
+                choice = event["choices"][0]
+                toks.append(choice["token"])
+                if choice["finish_reason"] is not None:
+                    out[i] = (toks, choice["finish_reason"],
+                              time.perf_counter() - t_start)
+            return
+        except api.RetryLater as e:
+            print(f"  client {i}: 429, retrying in {e.retry_after}s")
+            time.sleep(e.retry_after)
 
 
 def main():
@@ -37,35 +61,49 @@ def main():
 
     page_len = args.prompt_len + args.tokens
     sb = slot_cache_bytes(model, args.slots, page_len)
-    print(f"== continuous batching: {args.requests} requests on "
+    print(f"== HTTP front door: {args.requests} streaming clients on "
           f"{args.slots} slots x page {page_len} "
           f"({sb['per_slot']/2**10:.0f} KiB/slot)")
 
     eng = Engine(model, params, max_slots=args.slots, page_len=page_len,
                  chunk=args.chunk)
-    for i in range(args.requests):
-        # staggered workload: prompts and budgets vary per request
-        p = args.prompt_len - (i % 3)
-        n = max(2, args.tokens - 4 * i)
-        prompt = jax.random.randint(jax.random.PRNGKey(i), (p,), 0, cfg.vocab)
-        eng.submit(Request(uid=i, prompt=list(map(int, prompt)),
-                           max_new_tokens=n))
-    t0 = time.perf_counter()
-    steps = 0
-    results = {}
-    while eng.has_work:
-        for uid in eng.step():
-            results[uid] = eng.result(uid)
-            print(f"  step {steps:3d}: request {uid} finished "
-                  f"({len(results[uid])} tokens), "
-                  f"{eng.n_active} active / {eng.n_waiting} waiting")
-        steps += 1
-    t_eng = time.perf_counter() - t0
-    n_tok = sum(len(v) for v in results.values())
-    print(f"engine: {n_tok} tokens over {steps} steps in {t_eng*1e3:.0f} ms "
-          f"({n_tok/t_eng:.0f} tok/s)")
-    for i in sorted(results):
-        print(f"  req {i}: {results[i][:10]}{' ...' if len(results[i]) > 10 else ''}")
+    srv = BackgroundServer(Gateway(eng, max_queue=2 * args.requests)).start()
+    print(f"serving on http://{srv.host}:{srv.port} "
+          f"(standalone: python -m repro.serve.api)")
+    try:
+        t0 = time.perf_counter()
+        out = [None] * args.requests
+        threads = []
+        for i in range(args.requests):
+            # staggered workload: prompts and budgets vary per request
+            p = args.prompt_len - (i % 3)
+            n = max(2, args.tokens - 4 * i)
+            prompt = jax.random.randint(jax.random.PRNGKey(i), (p,), 0,
+                                        cfg.vocab)
+            threads.append(threading.Thread(
+                target=_client,
+                args=(srv.host, srv.port, i, list(map(int, prompt)), n,
+                      out, t0), daemon=True))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        t_eng = time.perf_counter() - t0
+        n_tok = sum(len(toks) for toks, _, _ in out)
+        print(f"server: {n_tok} tokens to {args.requests} clients in "
+              f"{t_eng*1e3:.0f} ms ({n_tok/t_eng:.0f} tok/s aggregate)")
+        for i, (toks, reason, dt) in enumerate(out):
+            print(f"  req {i}: {len(toks):3d} tokens ({reason}) in "
+                  f"{dt*1e3:6.0f} ms — {toks[:8]}"
+                  f"{' ...' if len(toks) > 8 else ''}")
+        snap = api.get_status(srv.host, srv.port)
+        lat = snap["latency_ms"]
+        print(f"/status: {snap['requests']['finished']} finished, "
+              f"decode step p50 {lat['decode_step']['p50']:.1f} ms, "
+              f"ttft p50 {lat['ttft']['p50']:.0f} ms, "
+              f"request p50 {lat['request']['p50']:.0f} ms")
+    finally:
+        srv.stop()
 
     print(f"\n== legacy lockstep batch: {args.requests} x {args.tokens} tokens")
     prompts = jax.random.randint(

@@ -1,13 +1,16 @@
 """Serving: continuous-batching engine, slot state cache, chunked prefill.
 
 ``Engine`` (scheduler.py) is the production path: slot-managed decode
-state, mid-flight admission/eviction, one hot jitted decode step.
+state, mid-flight admission/eviction/cancellation, one hot jitted decode
+step.  ``serve.api`` puts the streaming HTTP front door on top (SSE
+completions, admission control, ``/status`` from ``serve.metrics``).
 ``steps.py`` keeps the legacy static-batch factories the dry-run tooling
 lowers.  See docs/serving.md.
 """
 
+from .metrics import ServeMetrics
 from .prefill import ChunkedPrefill
-from .scheduler import Engine, Request
+from .scheduler import CANCELLED, Engine, Request
 from .state_cache import (
     SlotAllocator,
     abstract_slot_caches,
@@ -18,8 +21,10 @@ from .state_cache import (
 from .steps import abstract_caches, generate, make_decode_step, make_prefill_step
 
 __all__ = [
+    "CANCELLED",
     "Engine",
     "Request",
+    "ServeMetrics",
     "ChunkedPrefill",
     "SlotAllocator",
     "abstract_caches",

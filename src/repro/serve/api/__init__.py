@@ -1,0 +1,24 @@
+"""Streaming HTTP front door for ``serve.Engine``.
+
+``python -m repro.serve.api`` starts the server; the pieces compose as::
+
+    Engine (scheduler.py, its own thread)
+      ^ commands / v stream_callback
+    Gateway (gateway.py: admission control, cancellation, metrics)
+      ^ asyncio queues
+    ServeAPI (server.py: /v1/completions SSE + /status, stdlib asyncio)
+
+See docs/serving.md ("The HTTP front door") for the wire protocol.
+"""
+
+from .gateway import Gateway, QueueFull, StreamHandle
+from .server import BackgroundServer, ServeAPI, build_engine
+
+__all__ = [
+    "Gateway",
+    "QueueFull",
+    "StreamHandle",
+    "ServeAPI",
+    "BackgroundServer",
+    "build_engine",
+]

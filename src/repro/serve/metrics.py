@@ -1,0 +1,124 @@
+"""Serving metrics: counters, gauges, and latency percentiles.
+
+``ServeMetrics`` is the one mutable stats object the serving stack
+shares: the gateway's engine thread records step/admission timings, the
+async HTTP handlers record rejections and time-to-first-token, and the
+``/status`` endpoint serializes a consistent ``snapshot()``.  Everything
+is windowed host-side state — bounded deques and integer counters under
+one lock — so recording never touches the device or allocates per event.
+
+Latency percentiles are computed over sliding windows (last ``window``
+events) rather than reservoir samples: serving dashboards care about
+*recent* tail latency, and the windows are small enough to sort on every
+snapshot.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+
+def percentiles(values, pcts=(50, 90, 99)) -> Dict[str, float]:
+    """``{"p50": ..., ...}`` in the values' own unit (empty -> zeros)."""
+    out = {}
+    vals = sorted(values)
+    for p in pcts:
+        if not vals:
+            out[f"p{p}"] = 0.0
+        else:
+            idx = min(len(vals) - 1, int(len(vals) * p / 100))
+            out[f"p{p}"] = float(vals[idx])
+    return out
+
+
+class ServeMetrics:
+    """Thread-safe serving stats: counters + windowed latency percentiles.
+
+    Recorded events:
+
+    * ``record_submitted / record_rejected`` — admission outcomes (a
+      rejection is the 429 backpressure path, never seen by the engine);
+    * ``record_step(seconds, n_active)`` — one engine decode step;
+    * ``record_first_token(seconds)`` — per-request time-to-first-token
+      (submit -> first streamed token);
+    * ``record_finished(reason, n_tokens, seconds)`` — terminal event
+      with the request's total latency; ``reason`` is the engine's
+      ``finish_reason`` (length/stop/timeout/cancelled).
+    """
+
+    def __init__(self, window: int = 2048):
+        self._lock = threading.Lock()
+        self._started = time.monotonic()
+        self.n_submitted = 0
+        self.n_rejected = 0
+        self.n_steps = 0
+        self.n_tokens = 0
+        self.finish_reasons: Dict[str, int] = {}
+        self._step_s: deque = deque(maxlen=window)
+        self._ttft_s: deque = deque(maxlen=window)
+        self._request_s: deque = deque(maxlen=window)
+        self._busy_slots = 0  # n_active at the last recorded step
+
+    # -- recording (any thread) --------------------------------------------
+    def record_submitted(self) -> None:
+        with self._lock:
+            self.n_submitted += 1
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.n_rejected += 1
+
+    def record_step(self, seconds: float, n_active: int) -> None:
+        with self._lock:
+            self.n_steps += 1
+            self._step_s.append(seconds)
+            self._busy_slots = n_active
+
+    def record_first_token(self, seconds: float) -> None:
+        with self._lock:
+            self._ttft_s.append(seconds)
+
+    def record_tokens(self, n: int) -> None:
+        with self._lock:
+            self.n_tokens += n
+
+    def record_finished(self, reason: str, n_tokens: int,
+                        seconds: Optional[float] = None) -> None:
+        with self._lock:
+            self.finish_reasons[reason] = self.finish_reasons.get(reason,
+                                                                  0) + 1
+            if seconds is not None:
+                self._request_s.append(seconds)
+
+    # -- reading -------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """One consistent stats dict (the ``/status`` payload core)."""
+        with self._lock:
+            uptime = max(time.monotonic() - self._started, 1e-9)
+            n_finished = sum(self.finish_reasons.values())
+            return {
+                "uptime_s": uptime,
+                "requests": {
+                    "submitted": self.n_submitted,
+                    "finished": n_finished,
+                    "rejected": self.n_rejected,
+                    "by_finish_reason": dict(self.finish_reasons),
+                },
+                "throughput": {
+                    "tokens_total": self.n_tokens,
+                    "tokens_per_s": self.n_tokens / uptime,
+                    "requests_per_s": n_finished / uptime,
+                    "steps_total": self.n_steps,
+                },
+                "latency_ms": {
+                    "decode_step": percentiles(
+                        [s * 1e3 for s in self._step_s]),
+                    "ttft": percentiles([s * 1e3 for s in self._ttft_s]),
+                    "request": percentiles(
+                        [s * 1e3 for s in self._request_s]),
+                },
+                "busy_slots": self._busy_slots,
+            }

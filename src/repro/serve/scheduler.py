@@ -24,13 +24,24 @@ Scheduling loop (one ``step()``):
 
 Per-sequence recurrent state is fixed-size (the GOOM pitch), so joins
 and evictions are single-row scatters — no compaction, no paging.
+
+Request lifecycle terminals (``finish_reason``): ``"length"`` (token
+budget), ``"stop"`` (EOS), ``"timeout"`` (``deadline_ms`` expired — the
+slot is evicted mid-decode and the partial output kept), ``"cancelled"``
+(``Engine.cancel``, e.g. a disconnected client — no output is kept;
+``result()`` returns the ``CANCELLED`` sentinel, distinct from the
+``KeyError`` an unknown uid raises).  Streaming: requests with
+``stream=True`` flush every step and push fresh tokens through the
+engine's ``stream_callback`` — the hook the HTTP front door
+(``serve/api``) feeds SSE from.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +53,22 @@ from .prefill import ChunkedPrefill, _donate
 from .steps import _engine_scope
 
 
+class _Cancelled:
+    """Singleton terminal result of a cancelled request."""
+
+    def __repr__(self):
+        return "CANCELLED"
+
+    def __bool__(self):
+        return False
+
+
+#: Sentinel returned by ``Engine.result`` for cancelled uids — a distinct
+#: terminal state, so cancellation is distinguishable from "never
+#: submitted" (which raises ``KeyError``) and from an empty generation.
+CANCELLED = _Cancelled()
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request.
@@ -49,12 +76,19 @@ class Request:
     ``max_new_tokens`` counts every generated token (the first comes from
     the prompt's last logits).  ``prompt + max_new_tokens`` must fit the
     engine's ``page_len``.
+
+    ``deadline_ms`` bounds the request's total latency from ``submit``
+    (queue wait included): past it the request is evicted with partial
+    output and ``finish_reason() == "timeout"``.  ``stream=True`` opts
+    into per-step token flushes through the engine's ``stream_callback``.
     """
 
     uid: Any
     prompt: Sequence[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    stream: bool = False
 
 
 @dataclasses.dataclass
@@ -65,6 +99,8 @@ class _Active:
     out: List[int]        # materialized tokens (host)
     start_step: int       # engine step index of this request's first decode
     n_decoded: int = 0    # decode tokens produced (incl. not yet in `out`)
+    deadline: Optional[float] = None   # absolute time.monotonic() bound
+    n_streamed: int = 0   # tokens already pushed through stream_callback
 
 
 class Engine:
@@ -90,6 +126,8 @@ class Engine:
         seq_shards="auto",
         blocks=None,
         eos_scan_every: int = 8,
+        stream_callback: Optional[Callable[[Any, List[int],
+                                            Optional[str]], None]] = None,
     ):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
@@ -106,6 +144,12 @@ class Engine:
         # outputs are unchanged) keeps the loop dispatch-only in between
         # at the cost of a finished slot lingering up to K-1 extra steps
         self.eos_scan_every = max(1, eos_scan_every)
+        # called as stream_callback(uid, new_tokens, finish_reason) after
+        # each flush for requests with stream=True; finish_reason is None
+        # mid-stream and "length"/"stop"/"timeout"/"cancelled" exactly
+        # once, on the terminal event.  Settable after construction (the
+        # api gateway attaches itself here).
+        self.stream_callback = stream_callback
 
         self._prefill = ChunkedPrefill(
             model, chunk, backend=backend, mesh=mesh, seq_shards=seq_shards,
@@ -163,6 +207,13 @@ class Engine:
         self._tokens = jnp.zeros((max_slots,), jnp.int32)
         self._pos = jnp.zeros((max_slots,), jnp.int32)
         self._results: Dict[Any, List[int]] = {}
+        self._finish_reason: Dict[Any, str] = {}
+        self._cancelled: set = set()
+        # count of live (queued or active) requests carrying a deadline:
+        # the step loop reads the clock only when this is nonzero, so a
+        # deadline-free engine stays pure dispatch (regression-tested)
+        self._n_deadlines = 0
+        self._deadline_at: Dict[Any, float] = {}  # queued uids only
         # decode outputs not yet materialized on the host: one (max_slots,)
         # device vector per step since `_pending_base`.  The host only
         # blocks on them at a finish event (or every step under EOS
@@ -185,11 +236,38 @@ class Engine:
         return bool(self._active or self._queue)
 
     def result(self, uid) -> List[int]:
-        """Generated tokens of a finished request (KeyError if unknown)."""
+        """Terminal result of a request.
+
+        Generated tokens for a finished request (partial output for a
+        ``"timeout"``), the ``CANCELLED`` sentinel for a cancelled one,
+        and ``KeyError`` for a uid that was never submitted — the three
+        terminal states are mutually distinguishable.
+        """
+        if uid in self._cancelled:
+            return CANCELLED
         return self._results[uid]
 
+    def finish_reason(self, uid) -> str:
+        """Why a request terminated: length | stop | timeout | cancelled
+        (KeyError while still queued/active or never submitted)."""
+        return self._finish_reason[uid]
+
+    def pop_result(self, uid):
+        """``result(uid)`` that also forgets the request (long-lived
+        servers drain terminal state through this to stay bounded)."""
+        out = self.result(uid)
+        self._cancelled.discard(uid)
+        self._results.pop(uid, None)
+        self._finish_reason.pop(uid, None)
+        return out
+
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, request: Request) -> None:
+    def validate(self, request: Request) -> None:
+        """Raise ValueError for a request the engine would reject.
+
+        Split from ``submit`` so a front door can reject bad requests
+        (HTTP 400) on its own thread before handing off to the engine's.
+        """
         if request.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if len(request.prompt) < 1:
@@ -199,17 +277,68 @@ class Engine:
             raise ValueError(
                 f"request {request.uid!r}: prompt + max_new_tokens = {total} "
                 f"exceeds page_len {self.page_len}")
+        if request.deadline_ms is not None and request.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0 when set")
         uid = request.uid
-        if (uid in self._results
+        if (uid in self._results or uid in self._cancelled
                 or any(r.uid == uid for r in self._queue)
                 or any(a.request.uid == uid for a in self._active.values())):
             raise ValueError(f"duplicate request uid {uid!r}")
+
+    def submit(self, request: Request) -> None:
+        self.validate(request)
+        if request.deadline_ms is not None:
+            # stamp the absolute bound at arrival: queue wait counts
+            request.deadline_ms = float(request.deadline_ms)
+            self._deadline_at[request.uid] = (
+                time.monotonic() + request.deadline_ms / 1e3)
+            self._n_deadlines += 1
         self._queue.append(request)
 
-    def _finish(self, act: _Active) -> Any:
+    def cancel(self, uid) -> bool:
+        """Cancel a queued or active request (client disconnect path).
+
+        An active request's slot is evicted immediately — freed for the
+        next admission — and no output is kept: ``result(uid)`` returns
+        ``CANCELLED``.  Returns False when the uid is unknown or already
+        terminal (cancellation after the fact is a no-op).
+        """
+        for req in self._queue:
+            if req.uid == uid:
+                self._queue.remove(req)
+                self._terminal_deadline(req.uid, req.deadline_ms is not None)
+                self._mark_cancelled(req)
+                return True
+        for slot, act in list(self._active.items()):
+            if act.request.uid == uid:
+                del self._active[slot]
+                self._alloc.release(slot)
+                self._terminal_deadline(uid, act.deadline is not None)
+                self._mark_cancelled(act.request)
+                return True
+        return False
+
+    def _mark_cancelled(self, request: Request) -> None:
+        self._cancelled.add(request.uid)
+        self._finish_reason[request.uid] = "cancelled"
+        self._emit(request, [], "cancelled")
+
+    def _terminal_deadline(self, uid, had_deadline: bool) -> None:
+        self._deadline_at.pop(uid, None)
+        if had_deadline:
+            self._n_deadlines -= 1
+
+    def _emit(self, request: Request, toks: List[int],
+              reason: Optional[str]) -> None:
+        if self.stream_callback is not None and request.stream:
+            self.stream_callback(request.uid, toks, reason)
+
+    def _finish(self, act: _Active, reason: str = "length") -> Any:
         self._results[act.request.uid] = act.out
+        self._finish_reason[act.request.uid] = reason
         del self._active[act.slot]
         self._alloc.release(act.slot)
+        self._terminal_deadline(act.request.uid, act.deadline is not None)
         return act.request.uid
 
     def _flush(self) -> None:
@@ -236,6 +365,15 @@ class Engine:
         finished = []
         while self._queue and self._alloc.n_free:
             req = self._queue.popleft()
+            deadline = self._deadline_at.pop(req.uid, None)
+            if deadline is not None and time.monotonic() >= deadline:
+                # expired while waiting: never admitted, empty output
+                self._results[req.uid] = []
+                self._finish_reason[req.uid] = "timeout"
+                self._n_deadlines -= 1
+                self._emit(req, [], "timeout")
+                finished.append(req.uid)
+                continue
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
             p = int(prompt.shape[0])
             c = self._prefill.chunk
@@ -262,14 +400,18 @@ class Engine:
                         np.arange(p - c, p, dtype=np.int32)[None],
                         slot, self._tokens, self._pos))
             act = _Active(request=req, slot=int(slot), first=first, out=[],
-                          start_step=self._step_id)
+                          start_step=self._step_id, deadline=deadline)
             self._active[int(slot)] = act
             if req.max_new_tokens == 1 or req.eos_id is not None:
                 # needs the value now (may finish before any decode step)
                 act.out.append(int(np.asarray(first)))
                 if (req.max_new_tokens == 1
                         or act.out[0] == req.eos_id):
-                    finished.append(self._finish(act))
+                    reason = ("stop" if req.eos_id is not None
+                              and act.out[0] == req.eos_id else "length")
+                    act.n_streamed = len(act.out)
+                    self._emit(req, act.out, reason)
+                    finished.append(self._finish(act, reason))
         return finished
 
     # -- the hot loop --------------------------------------------------------
@@ -284,7 +426,16 @@ class Engine:
         self._tokens = nxt
         self._pending.append(nxt)
         self._step_id += 1
-        need_flush = False
+        # deadline sweep: host clock only — and only read at all while a
+        # deadlined request is live, so the common loop adds no work
+        expired = set()
+        if self._n_deadlines:
+            now = time.monotonic()
+            expired = {slot for slot, act in self._active.items()
+                       if act.deadline is not None and now >= act.deadline}
+        streaming = self.stream_callback is not None and any(
+            act.request.stream for act in self._active.values())
+        need_flush = bool(expired) or streaming
         for act in self._active.values():
             act.n_decoded += 1
             if 1 + act.n_decoded >= act.request.max_new_tokens:
@@ -298,16 +449,31 @@ class Engine:
         # checked at admission): keeps eviction O(1) amortized per token
         pre = {slot: len(act.out) for slot, act in self._active.items()}
         self._flush()
+        events = []
         for slot in list(self._active):
             act = self._active[slot]
             lo = max(pre[slot], 1)
             eos = act.request.eos_id
             fresh_toks = act.out[lo:]
+            reason = None
             if eos is not None and eos in fresh_toks:
                 act.out = act.out[:lo + fresh_toks.index(eos) + 1]
-                finished.append(self._finish(act))
+                reason = "stop"
             elif len(act.out) >= act.request.max_new_tokens:
-                finished.append(self._finish(act))
+                reason = "length"
+            elif slot in expired:
+                # evict mid-decode, keep the partial output
+                reason = "timeout"
+            if act.request.stream:
+                new = act.out[act.n_streamed:]
+                act.n_streamed = len(act.out)
+                if new or reason is not None:
+                    events.append((act.request, new, reason))
+            if reason is not None:
+                finished.append(self._finish(act, reason))
+        # callbacks fire after the engine's own bookkeeping is consistent
+        for req, new, reason in events:
+            self._emit(req, new, reason)
         return finished
 
     def run(self, requests: Sequence[Request] = ()) -> Dict[Any, List[int]]:
@@ -317,4 +483,6 @@ class Engine:
         while self.has_work:
             self.step()
         out, self._results = self._results, {}
+        for uid in out:
+            self._finish_reason.pop(uid, None)
         return out

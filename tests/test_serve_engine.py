@@ -14,6 +14,7 @@ from repro.configs import get_config
 from repro.models.common import unzip
 from repro.models.model import DecoderLM
 from repro.serve import (
+    CANCELLED,
     Engine,
     Request,
     SlotAllocator,
@@ -279,3 +280,246 @@ def test_legacy_generate_reuses_cached_jitted_steps():
     out2 = generate(model, params, prompt, n_tokens=3, max_len=16)
     assert list(_STEP_CACHE[model].values()) == steps1  # same executables
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# cancellation: slot eviction + the CANCELLED terminal state
+# ---------------------------------------------------------------------------
+class _FakeClock:
+    """Deterministic stand-in for the scheduler's ``time`` module."""
+
+    def __init__(self):
+        self.now = 1000.0
+
+    def monotonic(self):
+        return self.now
+
+
+def test_cancel_active_request_frees_slot_and_returns_sentinel():
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=30)))
+    p1 = list(map(int, _prompt(cfg, 5, seed=31)))
+    ref1 = _solo(model, params, p1, 4)
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4)
+    eng.submit(Request(uid="a", prompt=p0, max_new_tokens=30))
+    eng.submit(Request(uid="b", prompt=p1, max_new_tokens=4))
+    eng.step()
+    eng.step()
+    assert eng.n_active == 1 and eng.n_waiting == 1
+    assert eng.cancel("a") is True
+    # slot evicted immediately: allocator row free, request terminal
+    assert eng.n_active == 0 and eng._alloc.n_used == 0
+    assert eng.result("a") is CANCELLED
+    assert eng.finish_reason("a") == "cancelled"
+    assert "a" not in eng._results
+    # the freed slot admits the waiting request, which decodes correctly
+    while eng.has_work:
+        eng.step()
+    assert eng.result("b") == ref1
+    assert eng._alloc.n_used == 0
+    # terminal cancels are no-ops; unknown uids too
+    assert eng.cancel("a") is False
+    assert eng.cancel("b") is False
+    assert eng.cancel("never-submitted") is False
+
+
+def test_cancel_queued_request_never_runs():
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=32)))
+    p1 = list(map(int, _prompt(cfg, 4, seed=33)))
+    ref0 = _solo(model, params, p0, 5)
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4)
+    eng.submit(Request(uid=0, prompt=p0, max_new_tokens=5))
+    eng.submit(Request(uid=1, prompt=p1, max_new_tokens=5))
+    eng.step()  # 0 active, 1 queued
+    assert eng.cancel(1) is True
+    assert eng.n_waiting == 0
+    assert eng.result(1) is CANCELLED
+    while eng.has_work:
+        eng.step()
+    assert eng.result(0) == ref0
+
+
+def test_result_error_contract_distinguishes_terminal_states():
+    """Regression for the docstring promise: KeyError for unknown uids,
+    CANCELLED sentinel (never a KeyError, never a token list) for
+    cancelled ones — so cancellation != "never submitted"."""
+    _, model, params = _model("olmo-1b")
+    eng = Engine(model, params, max_slots=1, page_len=32, chunk=4)
+    with pytest.raises(KeyError):
+        eng.result("never-submitted")
+    eng.submit(Request(uid="c", prompt=[1, 2, 3], max_new_tokens=8))
+    eng.cancel("c")
+    assert eng.result("c") is CANCELLED
+    assert not CANCELLED  # falsy sentinel, repr()s as CANCELLED
+    assert repr(CANCELLED) == "CANCELLED"
+    # a cancelled uid is a *used* uid: resubmission is a duplicate error
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(Request(uid="c", prompt=[1, 2], max_new_tokens=2))
+    # pop_result forgets the terminal state entirely
+    assert eng.pop_result("c") is CANCELLED
+    with pytest.raises(KeyError):
+        eng.result("c")
+
+
+# ---------------------------------------------------------------------------
+# deadlines: mid-decode eviction, queue expiry, and the dispatch-only rule
+# ---------------------------------------------------------------------------
+def test_deadline_mid_decode_evicts_and_frees_slot(monkeypatch):
+    from repro.serve import scheduler
+
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=40)))
+    p1 = list(map(int, _prompt(cfg, 5, seed=41)))
+    ref0 = _solo(model, params, p0, 20)
+    ref1 = _solo(model, params, p1, 4)
+    clock = _FakeClock()
+    monkeypatch.setattr(scheduler, "time", clock)
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4)
+    eng.submit(Request(uid="t", prompt=p0, max_new_tokens=20,
+                       deadline_ms=50.0))
+    eng.submit(Request(uid="u", prompt=p1, max_new_tokens=4))
+    eng.step()
+    eng.step()
+    assert eng.n_active == 1
+    clock.now += 0.2  # 200ms: past the 50ms deadline
+    finished = eng.step()
+    assert "t" in finished
+    assert eng.finish_reason("t") == "timeout"
+    # partial output kept, and it is a prefix of the reference decode
+    got = eng.result("t")
+    assert 0 < len(got) < 20
+    assert got == ref0[:len(got)]
+    # the freed slot serves the queued request
+    while eng.has_work:
+        eng.step()
+    assert eng.result("u") == ref1
+    assert eng._alloc.n_used == 0
+
+
+def test_deadline_expired_in_queue_reports_timeout(monkeypatch):
+    from repro.serve import scheduler
+
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=42)))
+    clock = _FakeClock()
+    monkeypatch.setattr(scheduler, "time", clock)
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4)
+    eng.submit(Request(uid="long", prompt=p0, max_new_tokens=6))
+    eng.submit(Request(uid="q", prompt=[1, 2, 3], max_new_tokens=4,
+                       deadline_ms=10.0))
+    eng.step()  # "long" holds the only slot
+    clock.now += 1.0
+    while eng.has_work:
+        eng.step()
+    # never admitted: empty output, timeout reason, nothing leaked
+    assert eng.result("q") == []
+    assert eng.finish_reason("q") == "timeout"
+    assert len(eng.result("long")) == 6
+    assert eng._alloc.n_used == 0 and eng._n_deadlines == 0
+
+
+def test_step_loop_dispatch_only_without_deadlines(monkeypatch):
+    """Deadline support must cost nothing when unused: the step loop
+    reads no clock and materializes no extra host syncs (flush only at
+    the finish event) — the monkeypatch-and-count style of
+    test_dispatch_matrix.py applied to the scheduler hot loop."""
+    from repro.serve import scheduler
+
+    cfg, model, params = _model("olmo-1b")
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4)
+
+    clock_calls = {"n": 0}
+    real_time = scheduler.time
+
+    class _Counting:
+        @staticmethod
+        def monotonic():
+            clock_calls["n"] += 1
+            return real_time.monotonic()
+
+    flush_calls = {"n": 0}
+    real_flush = Engine._flush
+
+    def counting_flush(self):
+        flush_calls["n"] += 1
+        return real_flush(self)
+
+    monkeypatch.setattr(scheduler, "time", _Counting)
+    monkeypatch.setattr(Engine, "_flush", counting_flush)
+    eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=6))
+    eng.submit(Request(uid=1, prompt=[8, 9], max_new_tokens=6))
+    while eng.has_work:
+        eng.step()
+    assert clock_calls["n"] == 0, "deadline-free step loop read the clock"
+    # both requests finish on the same step (same budget, admitted
+    # together): exactly one flush materializes every token
+    assert flush_calls["n"] == 1
+    assert len(eng.result(0)) == 6 and len(eng.result(1)) == 6
+
+
+def test_deadlined_request_reads_clock_only_while_live(monkeypatch):
+    """With one deadlined request the clock is read once per step while
+    it is live — and not at all after it terminates."""
+    from repro.serve import scheduler
+
+    cfg, model, params = _model("olmo-1b")
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4)
+    calls = {"n": 0}
+    real_time = scheduler.time
+
+    class _Counting:
+        @staticmethod
+        def monotonic():
+            calls["n"] += 1
+            return real_time.monotonic()
+
+    monkeypatch.setattr(scheduler, "time", _Counting)
+    eng.submit(Request(uid="d", prompt=[1, 2], max_new_tokens=3,
+                       deadline_ms=60_000.0))
+    while eng.has_work:
+        eng.step()
+    assert eng.finish_reason("d") == "length"
+    after_finish = calls["n"]
+    eng.submit(Request(uid="p", prompt=[3, 4], max_new_tokens=3))
+    while eng.has_work:
+        eng.step()
+    assert calls["n"] == after_finish, "clock read with no live deadline"
+
+
+# ---------------------------------------------------------------------------
+# streaming: per-step token flush through stream_callback
+# ---------------------------------------------------------------------------
+def test_stream_callback_delivers_tokens_incrementally():
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 5, seed=50)))
+    ref = _solo(model, params, p0, 6)
+    got = []
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4,
+                 stream_callback=lambda uid, toks, reason:
+                     got.append((uid, list(toks), reason)))
+    eng.submit(Request(uid="s", prompt=p0, max_new_tokens=6, stream=True))
+    while eng.has_work:
+        eng.step()
+    # terminal event exactly once, with the right reason
+    assert [e[2] for e in got].count(None) == len(got) - 1
+    assert got[-1][2] == "length"
+    streamed = [t for _, toks, _ in got for t in toks]
+    assert streamed == ref == eng.result("s")
+    # streaming flushes every step: first batch arrives before finish
+    assert len(got) >= 2
+
+
+def test_stream_callback_cancel_emits_terminal_event():
+    cfg, model, params = _model("olmo-1b")
+    events = []
+    eng = Engine(model, params, max_slots=1, page_len=32, chunk=4,
+                 stream_callback=lambda uid, toks, reason:
+                     events.append((uid, reason)))
+    eng.submit(Request(uid="x", prompt=[1, 2, 3], max_new_tokens=20,
+                       stream=True))
+    eng.step()
+    eng.step()
+    eng.cancel("x")
+    assert events[-1] == ("x", "cancelled")
+    assert eng.result("x") is CANCELLED

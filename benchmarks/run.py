@@ -635,6 +635,125 @@ def serve_api(preset: str = "full", backend: str = "auto"):
     return res
 
 
+def serve_prefix(preset: str = "full", backend: str = "auto"):
+    """Cross-request prefix reuse: shared-system-prompt TTFT, on vs off.
+
+    The chat-serving shape prefix caching exists for: N clients share one
+    K-token system prompt and differ only in a short suffix.  Each client
+    is submitted alone and timed to its first token (TTFT == admission ==
+    prefill cost), against two engines over the same params — prefix
+    reuse on (warm radix index + carry checkpoints) and off (every
+    admission re-prefills from token 0).  Prefill work is also counted in
+    *dispatched tokens* via the prefill's call counters — a deterministic
+    proxy for prefill FLOPs that CI can assert on while wall-clock stays
+    informational.  Writes ``results/BENCH_serve.json`` (bench_serve/v1).
+    """
+    from repro.configs import get_config
+    from repro.models.common import unzip
+    from repro.models.model import DecoderLM
+    from repro.serve import Engine, Request
+
+    smoke = preset == "smoke"
+    arch = "goom-rnn-124m"
+    cfg = get_config(arch, smoke=True)
+    model = DecoderLM(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+
+    if smoke:
+        n_clients, k_shared, sfx, gen, chunk, max_slots = 6, 48, 4, 4, 4, 2
+    else:
+        n_clients, k_shared, sfx, gen, chunk, max_slots = 16, 192, 8, 8, 8, 4
+    page_len = k_shared + sfx + gen
+    shared = jax.random.randint(
+        jax.random.PRNGKey(11), (k_shared,), 0, cfg.vocab)
+    suffixes = jax.random.randint(
+        jax.random.PRNGKey(12), (n_clients, sfx), 0, cfg.vocab)
+    prompts = [list(map(int, shared)) + list(map(int, suffixes[i]))
+               for i in range(n_clients)]
+    print(f"# serve_prefix[{preset}]: {arch}(smoke), {n_clients} clients "
+          f"sharing a {k_shared}-token prefix (+{sfx} suffix), chunk {chunk}")
+
+    def run_engine(prefix_reuse):
+        eng = Engine(model, params, max_slots=max_slots, page_len=page_len,
+                     chunk=chunk, backend=backend,
+                     prefix_reuse=prefix_reuse)
+        # warm pass: compiles every jitted path and (reuse on) populates
+        # the index — the measured clients then hit a *warm* cache
+        eng.submit(Request(uid="warm", prompt=prompts[0],
+                           max_new_tokens=gen))
+        while eng.has_work:
+            eng.step()
+        eng.pop_result("warm")
+        pre_chunk = eng._prefill.n_chunk_calls
+        pre_tail = eng._prefill.n_tail_calls
+        ttfts, outs = [], {}
+        for i in range(n_clients):
+            t0 = time.perf_counter()
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=gen))
+            eng.step()  # admission (prefill) + first decode
+            ttfts.append(time.perf_counter() - t0)
+            while eng.has_work:
+                eng.step()
+            outs[i] = eng.pop_result(i)
+        # fused admission reprocesses the final piece: count it too, so
+        # dispatched == prompt tokens when reuse is off
+        fused = chunk if (k_shared + sfx) % chunk == 0 else 1
+        dispatched = ((eng._prefill.n_chunk_calls - pre_chunk) * chunk
+                      + (eng._prefill.n_tail_calls - pre_tail)
+                      + n_clients * fused)
+        lat = np.sort(np.asarray(ttfts)) * 1e3
+        stats = eng.prefix_stats()
+        return {
+            "ttft_ms": {"p50": float(lat[len(lat) // 2]),
+                        "p99": float(lat[min(len(lat) - 1,
+                                             int(len(lat) * 0.99))]),
+                        "mean": float(lat.mean())},
+            "prefill_tokens_dispatched": dispatched,
+            "prefill_tokens_per_prompt_token": dispatched / (
+                n_clients * (k_shared + sfx)),
+            "prefix_hit_rate": stats["hit_rate"],
+            "prefill_tokens_saved": stats["prefill_tokens_saved"],
+            "pool_occupancy": stats["pages"]["occupancy"],
+        }, outs
+
+    on, outs_on = run_engine(True)
+    off, outs_off = run_engine(False)
+    assert outs_on == outs_off  # reuse must not change a single token
+    # deterministic acceptance: warm hits really skipped prefix prefill
+    assert on["prefill_tokens_saved"] > 0
+    assert on["prefill_tokens_dispatched"] < off["prefill_tokens_dispatched"]
+
+    res = {
+        "schema": "bench_serve/v1",
+        "device_kind": jax.devices()[0].device_kind,
+        "platform": jax.default_backend(),
+        "preset": preset,
+        "workload": {"arch": arch, "clients": n_clients,
+                     "shared_prefix": k_shared, "suffix": sfx, "gen": gen,
+                     "chunk": chunk, "max_slots": max_slots,
+                     "page_len": page_len},
+        "reuse_on": on,
+        "reuse_off": off,
+        "ttft_speedup_p50": off["ttft_ms"]["p50"] / on["ttft_ms"]["p50"],
+        "dispatch_reduction": (off["prefill_tokens_dispatched"]
+                               / on["prefill_tokens_dispatched"]),
+    }
+    path = os.path.join(RESULTS_DIR, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print("mode,ttft_p50_ms,ttft_p99_ms,prefill_tokens,hit_rate")
+    for mode, row in (("reuse_on", on), ("reuse_off", off)):
+        print(f"{mode},{row['ttft_ms']['p50']:.1f},"
+              f"{row['ttft_ms']['p99']:.1f},"
+              f"{row['prefill_tokens_dispatched']},"
+              f"{row['prefix_hit_rate']:.2f}")
+    print(f"ttft speedup (off/on, p50): {res['ttft_speedup_p50']:.2f}x; "
+          f"prefill dispatch reduction: {res['dispatch_reduction']:.1f}x")
+    print(f"wrote {path}")
+    return res
+
+
 ALL = {
     "table1_range": table1_range,
     "fig1_chains": fig1_chains,
@@ -647,6 +766,7 @@ ALL = {
     "scan_sharded": scan_sharded,
     "serve_throughput": serve_throughput,
     "serve_api": serve_api,
+    "serve_prefix": serve_prefix,
 }
 
 
@@ -662,7 +782,7 @@ def main() -> None:
                          "sweeps reference+pallas+pallas_gpu_interpret by "
                          "default)")
     ap.add_argument("--preset", choices=["full", "smoke"], default="full",
-                    help="problem sizes for serve_throughput and the "
+                    help="problem sizes for the serve_* benchmarks and the "
                          "scan_backends --emit-bench seq sweep (smoke = "
                          "CI/interpret shapes)")
     ap.add_argument("--emit-bench", action="store_true",
@@ -690,7 +810,7 @@ def main() -> None:
                 tuple(args.backend
                       or ("reference", "pallas", "pallas_gpu_interpret")),
                 emit_bench=args.emit_bench, preset=args.preset)
-        elif name in ("serve_throughput", "serve_api"):
+        elif name in ("serve_throughput", "serve_api", "serve_prefix"):
             results[name] = ALL[name](
                 args.preset, (args.backend or ["auto"])[0])
         else:

@@ -373,6 +373,30 @@ def init_cache(
     }
 
 
+def init_paged_cache(
+    batch: int, cfg: AttentionCfg, page_size: int, n_pages: int,
+    max_blocks: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    """Block-granular paged decode cache (serve slot caches, global layers).
+
+    K/V live in a shared pool of ``n_pages`` pages of ``page_size`` tokens;
+    each of the ``batch`` slots holds a ``(max_blocks,)`` page table mapping
+    its block b to the pool page storing positions [b*ps, (b+1)*ps).  The
+    sentinel page id ``n_pages`` marks unassigned entries: scatters through
+    it are dropped (out-of-bounds writes), gathers clamp to an arbitrary
+    page whose scores the validity mask kills — so a cleared slot can keep
+    decoding dead weight without corrupting pages reassigned to others.
+    Page tables are filled with the sentinel at init (no slot owns pages
+    until admission assigns them)."""
+    shape = (n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pages": jnp.full((batch, max_blocks), n_pages, jnp.int32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 def _index_vec(cache, b: int) -> jax.Array:
     """Per-sequence cache index as a (B,) vector.
 
@@ -486,8 +510,11 @@ def _decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
 
     q/k_new/v_new: (B, 1, ·, D).  cache holds (B, L, KVH, D) plus ``index``
     — per-slot (B,) absolute positions of the incoming tokens (a scalar
-    broadcasts: the legacy lockstep-batch path).
+    broadcasts: the legacy lockstep-batch path).  A cache carrying a
+    ``pages`` table routes to the paged-pool variant instead.
     """
+    if "pages" in cache:
+        return _paged_decode_attention(q, k_new, v_new, cache, cfg, scale)
     b, _, h, d = q.shape
     kvh = cfg.n_kv_heads
     g = h // kvh
@@ -527,3 +554,48 @@ def _decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
                      preferred_element_type=jnp.float32)
     out = (acc / l).reshape(b, 1, h, d).astype(q.dtype)
     return out, {"k": k, "v": v, "index": cache["index"] + 1}
+
+
+def _paged_decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
+    """One-token decode against a paged pool (see ``init_paged_cache``).
+
+    Writes the new K/V at ``(pages[slot, index // ps], index % ps)`` —
+    sentinel page ids make the scatter a no-op for cleared slots — then
+    gathers each slot's pages back into a dense (B, L, KVH, D) view and
+    runs the same masked-softmax math as the dense path.  Positions past
+    ``index`` (including garbage gathered through sentinel/stale entries)
+    are masked to exactly-zero probabilities, so paged decode is bitwise
+    identical to dense decode for live slots."""
+    b, _, h, d = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    pool_k, pool_v, pages = cache["k"], cache["v"], cache["pages"]
+    ps = pool_k.shape[1]
+    max_blocks = pages.shape[1]
+    length = max_blocks * ps
+    index = _index_vec(cache, b)
+
+    rows = jnp.arange(b, dtype=jnp.int32)
+    blk = jnp.minimum(index // ps, max_blocks - 1)  # dead slots overrun; clamp
+    page = pages[rows, blk]                         # (B,) sentinel => dropped
+    k = pool_k.at[page, index % ps].set(k_new[:, 0].astype(pool_k.dtype))
+    v = pool_v.at[page, index % ps].set(v_new[:, 0].astype(pool_v.dtype))
+
+    # dense per-slot view: sentinel entries clamp to an arbitrary page whose
+    # contribution the validity mask zeroes exactly
+    kg = k[pages].reshape(b, length, kvh, d)
+    vg = v[pages].reshape(b, length, kvh, d)
+    slots = jnp.arange(length, dtype=jnp.int32)
+    valid = slots[None, :] <= index[:, None]
+
+    qg = q.reshape(b, 1, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    l = jnp.sum(p_, axis=-1, keepdims=True)
+    acc = jnp.einsum("bqhgk,bkhd->bqhgd", p_.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    out = (acc / l).reshape(b, 1, h, d).astype(q.dtype)
+    return out, {"k": k, "v": v, "pages": pages, "index": cache["index"] + 1}

@@ -15,7 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from ..sharding import constrain
-from .attention import AttentionCfg, attention_apply, attention_init, init_cache
+from .attention import (
+    AttentionCfg,
+    attention_apply,
+    attention_init,
+    init_cache,
+    init_paged_cache,
+)
 from .common import KeyGen, Param, stack_inits, unzip
 from .goom_layer import (
     GoomSSMCfg,
@@ -199,15 +205,26 @@ def block_apply(
     return x, (new_cache or None), aux
 
 
-def block_init_cache(blk: BlockCfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def block_init_cache(blk: BlockCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                     kv_pages: Optional[Tuple[int, int, int]] = None):
     c: Dict[str, Any] = {}
     if blk.mixer == "attention":
-        # per-sequence (B,) index: every cache row tracks its own absolute
-        # position, so slots in a serving batch can sit at different depths
-        c["attn"] = dict(
-            init_cache(batch, blk.attn, max_len, dtype),
-            index=jnp.zeros((batch,), jnp.int32),
-        )
+        if kv_pages is not None and blk.attn.window is None:
+            # serve slot caches: global layers store KV in a shared page
+            # pool with per-slot page tables (cross-request prefix reuse);
+            # windowed layers keep dense rolling buffers — their state is
+            # bounded by the window, dense rows cost the same as pages
+            ps, n_pages, max_blocks = kv_pages
+            c["attn"] = init_paged_cache(batch, blk.attn, ps, n_pages,
+                                         max_blocks, dtype)
+        else:
+            # per-sequence (B,) index: every cache row tracks its own
+            # absolute position, so slots in a serving batch can sit at
+            # different depths
+            c["attn"] = dict(
+                init_cache(batch, blk.attn, max_len, dtype),
+                index=jnp.zeros((batch,), jnp.int32),
+            )
     elif blk.mixer == "rwkv6":
         c["rwkv"] = rwkv6_init_state(batch, blk.rwkv)
     elif blk.mixer == "mamba":

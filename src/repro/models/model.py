@@ -200,20 +200,26 @@ class DecoderLM:
         return loss, metrics
 
     # -- serving -------------------------------------------------------------
-    def init_caches(self, batch: int, max_len: int):
+    def init_caches(self, batch: int, max_len: int, *, kv_pages=None):
         """Per-group, per-period cache lists (leaves alias 1:1 under jit
         donation — see blocks.group_apply).
 
         Every leaf leads with the ``batch`` dim, and attention caches carry a
         per-sequence ``(batch,)`` index — rows are independent *slots*, so a
-        serving engine can gather/scatter whole sequences by row."""
+        serving engine can gather/scatter whole sequences by row.
+
+        ``kv_pages=(page_size, n_pages, max_blocks)`` switches global
+        attention layers to the paged pool layout (see
+        ``attention.init_paged_cache``); recurrent and windowed layers keep
+        dense per-row state either way."""
         caches = []
         for g in self.cfg.groups:
             def period_cache(_=None):
                 return {
                     f"b{i}": c
                     for i, blk in enumerate(g.period)
-                    if (c := block_init_cache(blk, batch, max_len))
+                    if (c := block_init_cache(blk, batch, max_len,
+                                              kv_pages=kv_pages))
                 }
 
             if g.n_periods == 1:
@@ -222,16 +228,32 @@ class DecoderLM:
                 caches.append([period_cache() for _ in range(g.n_periods)])
         return caches
 
-    def init_slot_caches(self, max_slots: int, page_len: int):
+    def init_slot_caches(self, max_slots: int, page_len: int, *,
+                         page_size: Optional[int] = None,
+                         cache_pages: int = 0):
         """Slot-managed decode state for continuous batching (serve.Engine).
 
         One row per slot: fixed-size GOOM/SSM recurrent state per recurrent
-        layer plus a ``page_len`` KV page per attention layer (ring-buffer
-        for windowed layers, linear for global ones — the engine enforces
-        ``prompt + generated <= page_len`` so linear pages never wrap).
-        Identical structure to :meth:`init_caches`; the dedicated name pins
-        the slot semantics for serving callers and shape helpers."""
-        return self.init_caches(max_slots, page_len)
+        layer plus KV storage per attention layer (ring-buffer for windowed
+        layers; the engine enforces ``prompt + generated <= page_len`` so
+        linear storage never wraps).
+
+        With ``page_size=None`` (default) global attention layers get dense
+        ``(max_slots, page_len, …)`` rows — the legacy layout the shape
+        helpers and dry-run costing report.  With ``page_size=ps`` they
+        store KV in a shared pool of ``max_slots * ceil(page_len/ps) +
+        cache_pages`` pages with per-slot page tables instead: pages can be
+        shared across slots (cross-request prefix reuse) and ``cache_pages``
+        extra pages let completed prefixes outlive their slot."""
+        if page_size is None:
+            return self.init_caches(max_slots, page_len)
+        ps = int(page_size)
+        if ps < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        max_blocks = -(-page_len // ps)
+        n_pages = max_slots * max_blocks + int(cache_pages)
+        return self.init_caches(max_slots, max_blocks * ps,
+                                kv_pages=(ps, n_pages, max_blocks))
 
     def prefill(self, params, tokens, caches, *, fresh_caches=False, **kw):
         """Process a prompt chunk, filling caches from each row's cache

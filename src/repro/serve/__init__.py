@@ -4,19 +4,26 @@
 state, mid-flight admission/eviction/cancellation, one hot jitted decode
 step.  ``serve.api`` puts the streaming HTTP front door on top (SSE
 completions, admission control, ``/status`` from ``serve.metrics``).
-``steps.py`` keeps the legacy static-batch factories the dry-run tooling
-lowers.  See docs/serving.md.
+``state_cache`` holds the paged KV pool, refcounted page allocator, and
+the radix prefix index behind cross-request prefix reuse.  ``steps.py``
+keeps the legacy static-batch factories the dry-run tooling lowers.  See
+docs/serving.md.
 """
 
 from .metrics import ServeMetrics
 from .prefill import ChunkedPrefill
 from .scheduler import CANCELLED, Engine, Request
 from .state_cache import (
+    PagePool,
+    PrefixIndex,
     SlotAllocator,
     abstract_slot_caches,
+    gather_prefix,
     read_slot,
     slot_cache_bytes,
+    strip_checkpoint,
     write_slot,
+    write_slot_paged,
 )
 from .steps import abstract_caches, generate, make_decode_step, make_prefill_step
 
@@ -26,12 +33,17 @@ __all__ = [
     "Request",
     "ServeMetrics",
     "ChunkedPrefill",
+    "PagePool",
+    "PrefixIndex",
     "SlotAllocator",
     "abstract_caches",
     "abstract_slot_caches",
     "slot_cache_bytes",
+    "gather_prefix",
     "read_slot",
+    "strip_checkpoint",
     "write_slot",
+    "write_slot_paged",
     "generate",
     "make_prefill_step",
     "make_decode_step",

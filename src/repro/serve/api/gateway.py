@@ -114,6 +114,9 @@ class Gateway:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         engine.stream_callback = self._on_stream
+        # seed the prefix-cache gauges so /status has them before the
+        # first step (and when prefix reuse is disabled)
+        self.metrics.record_prefix_stats(engine.prefix_stats())
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Gateway":
@@ -180,6 +183,8 @@ class Gateway:
                 eng.step()
                 self.metrics.record_step(time.perf_counter() - t0,
                                          eng.n_active)
+                # engine-thread-only counters, synced as gauges for /status
+                self.metrics.record_prefix_stats(eng.prefix_stats())
             except Exception:
                 traceback.print_exc()
                 self._fail_all("error")

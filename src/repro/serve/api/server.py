@@ -154,6 +154,10 @@ class ServeAPI:
     def status(self) -> dict:
         eng = self.gateway.engine
         snap = self.gateway.metrics.snapshot()
+        # live read, like the engine gauges below: the metrics copy is
+        # synced after each step, which can lag the terminal stream event
+        # a fast client reacts to (pure-python counters; GIL-safe)
+        snap["prefix_cache"] = eng.prefix_stats()
         snap["engine"] = {
             "max_slots": eng.max_slots,
             "n_active": eng.n_active,
@@ -162,6 +166,8 @@ class ServeAPI:
             "queue_depth": self.gateway.queue_depth(),
             "queue_limit": self.gateway.max_queue,
             "page_len": eng.page_len,
+            "page_size": eng.page_size,
+            "prefix_reuse": eng.prefix_reuse,
         }
         return snap
 
@@ -303,7 +309,8 @@ class BackgroundServer:
 
 def build_engine(arch: str = "olmo-1b", *, smoke: bool = True,
                  max_slots: int = 4, page_len: int = 128, chunk: int = 16,
-                 backend: str = "auto", seed: int = 0):
+                 backend: str = "auto", seed: int = 0,
+                 prefix_reuse: bool = True):
     """Construct a (randomly initialized) model + Engine for serving.
 
     The demo/test entry — real deployments would load trained params and
@@ -320,5 +327,5 @@ def build_engine(arch: str = "olmo-1b", *, smoke: bool = True,
     model = DecoderLM(cfg)
     params, _ = unzip(model.init(jax.random.PRNGKey(seed)))
     eng = Engine(model, params, max_slots=max_slots, page_len=page_len,
-                 chunk=chunk, backend=backend)
+                 chunk=chunk, backend=backend, prefix_reuse=prefix_reuse)
     return eng, cfg

@@ -46,7 +46,10 @@ class ServeMetrics:
       (submit -> first streamed token);
     * ``record_finished(reason, n_tokens, seconds)`` — terminal event
       with the request's total latency; ``reason`` is the engine's
-      ``finish_reason`` (length/stop/timeout/cancelled).
+      ``finish_reason`` (length/stop/timeout/cancelled);
+    * ``record_prefix_stats(stats)`` — gauge sync of the engine's
+      prefix-cache counters (``Engine.prefix_stats()``): hit rate,
+      prefill tokens saved, page-pool occupancy.
     """
 
     def __init__(self, window: int = 2048):
@@ -61,6 +64,7 @@ class ServeMetrics:
         self._ttft_s: deque = deque(maxlen=window)
         self._request_s: deque = deque(maxlen=window)
         self._busy_slots = 0  # n_active at the last recorded step
+        self._prefix: Optional[dict] = None  # last prefix-cache gauge sync
 
     # -- recording (any thread) --------------------------------------------
     def record_submitted(self) -> None:
@@ -93,12 +97,24 @@ class ServeMetrics:
             if seconds is not None:
                 self._request_s.append(seconds)
 
+    def record_prefix_stats(self, stats: dict) -> None:
+        """Sync the engine's prefix-cache counters (gauge overwrite —
+        the engine thread pushes its own monotonic totals)."""
+        with self._lock:
+            self._prefix = dict(stats)
+
     # -- reading -------------------------------------------------------------
     def snapshot(self) -> dict:
         """One consistent stats dict (the ``/status`` payload core)."""
         with self._lock:
             uptime = max(time.monotonic() - self._started, 1e-9)
             n_finished = sum(self.finish_reasons.values())
+            prefix = dict(self._prefix) if self._prefix is not None else {
+                "enabled": False, "lookups": 0, "hits": 0, "hit_rate": 0.0,
+                "hit_tokens": 0, "prefill_tokens_saved": 0, "nodes": 0,
+                "evicted": 0, "page_size": 0,
+                "pages": {"total": 0, "used": 0, "free": 0, "occupancy": 0.0},
+            }
             return {
                 "uptime_s": uptime,
                 "requests": {
@@ -121,4 +137,5 @@ class ServeMetrics:
                         [s * 1e3 for s in self._request_s]),
                 },
                 "busy_slots": self._busy_slots,
+                "prefix_cache": prefix,
             }

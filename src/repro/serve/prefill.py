@@ -20,19 +20,21 @@ e±200 dynamic range in tests/test_serve_engine.py).
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
 
+from ..kernels.dispatch import current_platform
 from ..models.model import DecoderLM
 from .steps import _engine_scope
 
 
 def _donate(argnums):
     # donation is a no-op (plus a warning) on CPU; only request it where
-    # XLA actually aliases buffers
-    return argnums if jax.default_backend() != "cpu" else ()
+    # XLA actually aliases buffers.  Platform comes from the cached
+    # single-read resolver, not a fresh jax.default_backend() call.
+    return argnums if current_platform() != "cpu" else ()
 
 
 class ChunkedPrefill:
@@ -57,6 +59,10 @@ class ChunkedPrefill:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.model = model
         self.chunk = chunk
+        # dispatch counters: prefix-reuse tests assert a warm hit issues
+        # exactly the suffix's chunks, by deltas of these
+        self.n_chunk_calls = 0
+        self.n_tail_calls = 0
 
         def chunk_step(params, tokens, caches, positions):
             with _engine_scope(backend, mesh, seq_shards, blocks):
@@ -71,12 +77,22 @@ class ChunkedPrefill:
         self._tail_step = jax.jit(tail_step, donate_argnums=_donate((2,)))
 
     def __call__(
-        self, params, prompt, caches, *, start: int = 0
+        self, params, prompt, caches, *, start: int = 0,
+        capture_every: Optional[int] = None,
+        capture: Optional[Callable[[int, Any], None]] = None,
     ) -> Tuple[jax.Array, Any, int]:
         """Ingest ``prompt`` (1-D int tokens) into a batch-1 cache tree.
 
         ``start`` is the absolute position of the prompt's first token
-        (nonzero when streaming more tokens into an existing sequence).
+        (nonzero when streaming more tokens into an existing sequence, or
+        when resuming past a cached prefix restored via
+        ``state_cache.gather_prefix``).  ``capture(pos, caches)`` fires
+        after each full chunk that lands on a multiple of
+        ``capture_every`` — the engine snapshots scan carries at page
+        boundaries there; the callback must not mutate or hold the live
+        tree past the next call (it gets donated).  Only full-chunk
+        boundaries are captured, so published checkpoints always come
+        from the same compiled chunk schedule regardless of prompt tail.
         Returns ``(last_logits (1, vocab), caches, next_pos)`` — the
         logits of the final prompt token (sample the first generated
         token from them) and the position the first decode step runs at.
@@ -95,10 +111,15 @@ class ChunkedPrefill:
             toks = prompt[None, j * c:(j + 1) * c]
             positions = np.arange(pos, pos + c, dtype=np.int32)[None]
             logits, caches = self._chunk_step(params, toks, caches, positions)
+            self.n_chunk_calls += 1
             pos += c
+            if (capture is not None and capture_every
+                    and pos % capture_every == 0):
+                capture(pos, caches)
         for t in range(n_full * c, p):
             logits, caches = self._tail_step(
                 params, prompt[None, t:t + 1],
                 caches, np.asarray([pos], np.int32))
+            self.n_tail_calls += 1
             pos += 1
         return logits[:, -1, :], caches, pos

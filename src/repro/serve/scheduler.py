@@ -23,7 +23,13 @@ Scheduling loop (one ``step()``):
      slots on the host; freed slots admit new requests on the next step.
 
 Per-sequence recurrent state is fixed-size (the GOOM pitch), so joins
-and evictions are single-row scatters — no compaction, no paging.
+and evictions are single-row scatters.  Global-attention KV lives in a
+block-granular page pool with per-slot page tables
+(``state_cache.PagePool``); admission consults a host-side radix index
+of cached prompt prefixes (``state_cache.PrefixIndex``) and, on a hit,
+restores the GOOM/SSM scan carry from a page-boundary checkpoint and
+resumes chunked prefill at the divergence point — prefill cost becomes
+O(suffix) on hit traffic.  See docs/serving.md.
 
 Request lifecycle terminals (``finish_reason``): ``"length"`` (token
 budget), ``"stop"`` (EOS), ``"timeout"`` (``deadline_ms`` expired — the
@@ -128,6 +134,9 @@ class Engine:
         eos_scan_every: int = 8,
         stream_callback: Optional[Callable[[Any, List[int],
                                             Optional[str]], None]] = None,
+        page_size: Optional[int] = None,
+        cache_pages: Optional[int] = None,
+        prefix_reuse: bool = True,
     ):
         if model.cfg.frontend is not None:
             raise NotImplementedError(
@@ -139,6 +148,21 @@ class Engine:
         self.params = params
         self.max_slots = max_slots
         self.page_len = page_len
+        # KV paging geometry.  page_size defaults to the prefill chunk so
+        # chunk boundaries land on page boundaries: checkpoints then exist
+        # at every page edge and a resumed prefill replays the exact chunk
+        # schedule of the from-scratch one (bit-identical outputs).
+        self.page_size = int(page_size if page_size is not None else chunk)
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self._max_blocks = -(-page_len // self.page_size)
+        self._kv_len = self._max_blocks * self.page_size
+        if cache_pages is None:
+            # room for ~2 slots' worth of finished prefixes to outlive
+            # their slots before LRU eviction kicks in
+            cache_pages = 2 * self._max_blocks
+        self._n_pages = max_slots * self._max_blocks + int(cache_pages)
+        self.prefix_reuse = bool(prefix_reuse)
         # EOS requests need their token values on the host; scanning every
         # `eos_scan_every` steps (overrun past EOS is trimmed at flush, so
         # outputs are unchanged) keeps the loop dispatch-only in between
@@ -168,38 +192,64 @@ class Engine:
         # fused admission finishers: the prompt's final piece, the argmax
         # of its logits, the scatter into the slot caches, and the
         # token/position bookkeeping all land in ONE dispatch — admission
-        # costs (head dispatches + 1) instead of a string of eager ops
+        # costs (head dispatches + 1) instead of a string of eager ops.
+        # write_pages/table_row route the dense cache's KV blocks into the
+        # slot's pool pages (sentinel entries skip shared prefix pages).
         def _finish_admit(logits, caches, next_pos, slot_caches, slot,
-                          tok_vec, pos_vec):
+                          tok_vec, pos_vec, write_pages, table_row):
             first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[0]
-            slot_caches = state_cache.write_slot(slot_caches, caches, slot)
+            slot_caches = state_cache.write_slot_paged(
+                slot_caches, caches, slot, write_pages, table_row)
             return (first, slot_caches, tok_vec.at[slot].set(first),
                     pos_vec.at[slot].set(next_pos))
 
         def admit_chunk(params, slot_caches, caches, tokens, positions,
-                        slot, tok_vec, pos_vec):
+                        slot, tok_vec, pos_vec, write_pages, table_row):
             with _engine_scope(backend, mesh, seq_shards, blocks):
                 logits, caches = model.prefill(params, tokens, caches,
                                                positions=positions)
             return _finish_admit(logits, caches, positions[0, -1] + 1,
-                                 slot_caches, slot, tok_vec, pos_vec)
+                                 slot_caches, slot, tok_vec, pos_vec,
+                                 write_pages, table_row)
 
         def admit_tail(params, slot_caches, caches, token, index,
-                       slot, tok_vec, pos_vec):
+                       slot, tok_vec, pos_vec, write_pages, table_row):
             with _engine_scope(backend, mesh, seq_shards, blocks):
                 logits, caches = model.decode_step(params, token, caches,
                                                    index)
             return _finish_admit(logits, caches, index[0] + 1,
-                                 slot_caches, slot, tok_vec, pos_vec)
+                                 slot_caches, slot, tok_vec, pos_vec,
+                                 write_pages, table_row)
 
         self._admit_chunk = jax.jit(admit_chunk, donate_argnums=_donate((1,)))
         self._admit_tail = jax.jit(admit_tail, donate_argnums=_donate((1,)))
 
-        self._caches = model.init_slot_caches(max_slots, page_len)
+        self._caches = model.init_slot_caches(
+            max_slots, page_len, page_size=self.page_size,
+            cache_pages=int(cache_pages))
         # fresh per-request prefill cache as one compiled executable (the
         # eager zeros tree costs a dispatch per leaf otherwise)
-        self._fresh = jax.jit(lambda: model.init_caches(1, page_len))
+        self._fresh = jax.jit(lambda: model.init_caches(1, self._kv_len))
         self._alloc = state_cache.SlotAllocator(max_slots)
+        # host-side page bookkeeping: the pool refcounts every page, the
+        # radix index maps cached prompt block-prefixes to (page, carry
+        # checkpoint), and _slot_pages records the refs each slot holds
+        self._pool = state_cache.PagePool(self._n_pages)
+        self._index = state_cache.PrefixIndex(self._pool, self.page_size)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._tokens_saved = 0
+        # paged/dense skeleton of the slot tree (from shapes only): the
+        # checkpoint strip walks dense batch-1 caches, which cannot tell
+        # paged layers apart on their own
+        meta = state_cache.paged_meta(jax.eval_shape(
+            lambda: model.init_slot_caches(
+                max_slots, page_len, page_size=self.page_size,
+                cache_pages=int(cache_pages))))
+        self._snapshot = jax.jit(
+            lambda caches: state_cache.strip_checkpoint(meta, caches))
+        self._gather = jax.jit(state_cache.gather_prefix)
+        self._clear = jax.jit(state_cache.clear_slot_pages,
+                              donate_argnums=_donate((0,)))
         self._queue: Deque[Request] = deque()
         self._active: Dict[int, _Active] = {}
         # next input token and its absolute position, per slot — both
@@ -234,6 +284,30 @@ class Engine:
     @property
     def has_work(self) -> bool:
         return bool(self._active or self._queue)
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Prefix-cache and page-pool counters (host-side, cheap).
+
+        The gateway polls this into ``ServeMetrics`` so ``GET /status``
+        exposes hit rate, tokens saved, and pool occupancy."""
+        idx, pool = self._index, self._pool
+        return {
+            "enabled": self.prefix_reuse,
+            "lookups": idx.n_lookups,
+            "hits": idx.n_hits,
+            "hit_rate": idx.n_hits / max(idx.n_lookups, 1),
+            "hit_tokens": idx.n_hit_tokens,
+            "prefill_tokens_saved": self._tokens_saved,
+            "nodes": idx.n_nodes,
+            "evicted": idx.n_evicted,
+            "page_size": self.page_size,
+            "pages": {
+                "total": pool.n_pages,
+                "used": pool.n_used,
+                "free": pool.n_free,
+                "occupancy": pool.n_used / pool.n_pages,
+            },
+        }
 
     def result(self, uid) -> List[int]:
         """Terminal result of a request.
@@ -312,11 +386,23 @@ class Engine:
         for slot, act in list(self._active.items()):
             if act.request.uid == uid:
                 del self._active[slot]
-                self._alloc.release(slot)
+                self._release_slot(slot)
                 self._terminal_deadline(uid, act.deadline is not None)
                 self._mark_cancelled(act.request)
                 return True
         return False
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a slot and its page refs to their pools.
+
+        Order matters: the slot's page tables are reset to the sentinel
+        *before* its pages are unrefed — the dead row keeps decoding
+        (static shapes), and a stale table would scatter KV into pages
+        the pool may already have handed to another slot."""
+        self._caches = self._clear(self._caches, jnp.asarray(slot, jnp.int32))
+        for pg in self._slot_pages.pop(slot, []):
+            self._pool.unref(pg)
+        self._alloc.release(slot)
 
     def _mark_cancelled(self, request: Request) -> None:
         self._cancelled.add(request.uid)
@@ -337,7 +423,7 @@ class Engine:
         self._results[act.request.uid] = act.out
         self._finish_reason[act.request.uid] = reason
         del self._active[act.slot]
-        self._alloc.release(act.slot)
+        self._release_slot(act.slot)
         self._terminal_deadline(act.request.uid, act.deadline is not None)
         return act.request.uid
 
@@ -378,27 +464,78 @@ class Engine:
             p = int(prompt.shape[0])
             c = self._prefill.chunk
             r = p % c
-            slot = jnp.asarray(self._alloc.allocate(), jnp.int32)
-            caches = self._fresh()
-            # head: everything except the final piece (a full chunk when
-            # the length divides, the last token otherwise); the final
-            # piece runs in the fused admission step
-            head = prompt[:-1] if r else prompt[:p - c]
+            ps, mb = self.page_size, self._max_blocks
+            sent = self._pool.sentinel
+            slot = self._alloc.allocate()
+            # the fused step reprocesses the prompt's final piece (a full
+            # chunk when the length divides, the last token otherwise) —
+            # a prefix hit must stop short of it so its logits are real
+            fused_start = p - (1 if r else c)
+            hit_blocks, hit_pages, ckpt = 0, [], None
+            if self.prefix_reuse:
+                hit_blocks, hit_pages, ckpt = self._index.match(
+                    prompt.tolist(), fused_start // ps)
+                # resume only on chunk-aligned boundaries: the suffix then
+                # replays the from-scratch chunk schedule bit-for-bit
+                # (always aligned when page_size % chunk == 0)
+                while hit_blocks and (hit_blocks * ps) % c:
+                    hit_blocks -= 1
+                hit_pages = hit_pages[:hit_blocks]
+            # the slot takes its page refs up front, before eviction can
+            # run: reserve() below may drop the very index nodes we hit
+            for pg in hit_pages:
+                self._pool.ref(pg)
+            self._index.reserve(mb - hit_blocks)
+            fresh = self._pool.alloc(mb - hit_blocks)
+            if fresh is None:  # sizing invariant guarantees this never trips
+                raise RuntimeError("page pool exhausted at admission")
+            table_row = hit_pages + fresh             # the slot's page table
+            write_row = [sent] * hit_blocks + fresh   # skip shared pages
+            hit_len = hit_blocks * ps
+            if hit_len:
+                # densify the cached prefix: pool pages through the hit
+                # blocks (zeros past them) + the carry checkpoint at hit_len
+                gather_row = np.asarray(
+                    hit_pages + [sent] * (mb - hit_blocks), np.int32)
+                caches = self._gather(self._caches, ckpt, gather_row)
+                self._tokens_saved += hit_len
+            else:
+                caches = self._fresh()
+            head = prompt[hit_len:fused_start]
+            captures: Dict[int, Any] = {}
             if head.size:
-                _, caches, _ = self._prefill(self.params, head, caches)
+                _, caches, _ = self._prefill(
+                    self.params, head, caches, start=hit_len,
+                    capture_every=ps,
+                    capture=lambda pos, tree: captures.__setitem__(
+                        pos, self._snapshot(tree)))
+            slot = jnp.asarray(slot, jnp.int32)
+            wp = np.asarray(write_row, np.int32)
+            tr = np.asarray(table_row, np.int32)
             if r:
                 first, self._caches, self._tokens, self._pos = (
                     self._admit_tail(
                         self.params, self._caches, caches,
                         prompt[None, -1:], np.asarray([p - 1], np.int32),
-                        slot, self._tokens, self._pos))
+                        slot, self._tokens, self._pos, wp, tr))
             else:
                 first, self._caches, self._tokens, self._pos = (
                     self._admit_chunk(
                         self.params, self._caches, caches,
                         prompt[None, p - c:],
                         np.arange(p - c, p, dtype=np.int32)[None],
-                        slot, self._tokens, self._pos))
+                        slot, self._tokens, self._pos, wp, tr))
+            self._slot_pages[int(slot)] = list(table_row)
+            if self.prefix_reuse:
+                # publish only blocks fully covered by full-chunk calls
+                # (captured checkpoints): future hits on them replay the
+                # same compiled schedule regardless of this prompt's tail
+                pub_blocks = (hit_len + (head.size // c) * c) // ps
+                ckpts = [None] * hit_blocks + [
+                    captures.get((b + 1) * ps)
+                    for b in range(hit_blocks, pub_blocks)]
+                self._index.publish(prompt.tolist(),
+                                    table_row[:pub_blocks], ckpts)
             act = _Active(request=req, slot=int(slot), first=first, out=[],
                           start_step=self._step_id, deadline=deadline)
             self._active[int(slot)] = act

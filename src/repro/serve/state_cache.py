@@ -1,54 +1,78 @@
-"""Slot-managed decode-state cache for continuous batching.
+"""Paged decode-state cache for continuous batching with prefix reuse.
 
 The decode caches built by ``DecoderLM.init_slot_caches(max_slots,
-page_len)`` are pytrees whose every leaf leads with the slot dimension:
-fixed-size GOOM/SSM recurrent state per recurrent layer, a ``page_len``
-KV page per attention layer, and a per-slot ``(max_slots,)`` position
-index.  A *slot* is one resident sequence; this module provides the ops
-that move whole sequences in and out of slots:
+page_len, page_size=ps)`` are pytrees whose recurrent leaves lead with
+the slot dimension while global-attention KV lives in a shared **page
+pool**: ``(n_pages, ps, kvh, hd)`` pages plus a per-slot ``(max_slots,
+max_blocks)`` page table.  A *slot* is one resident sequence; a *page*
+is ``ps`` tokens of one layer's KV, shareable between slots that decode
+from a common prompt prefix.  This module provides:
 
-  * ``write_slot(slot_caches, src, slot)`` — scatter a freshly prefilled
-    single-sequence cache tree into row ``slot`` (jit-able, donation-safe:
-    output aliases input 1:1);
-  * ``read_slot(slot_caches, slot)`` — gather row ``slot`` back out as a
-    batch-1 cache tree (debugging / migration);
-  * ``SlotAllocator`` — the host-side free list (allocation is control
-    flow, not device work).
+device-side tree ops (jit-able; sentinel page id ``n_pages`` exploits
+JAX's dropped out-of-bounds scatters / clamped gathers):
 
-Shape helpers (``abstract_slot_caches``, ``slot_cache_bytes``) cost a
-serving config through ``jax.eval_shape`` without allocating anything —
-``launch/dryrun.py --serve-cache-report`` builds its table from them.
+  * ``write_slot_paged(slot_caches, src, slot, write_pages, table_row)``
+    — scatter a freshly prefilled batch-1 cache into row ``slot``:
+    recurrent leaves by row, KV blocks into the pool pages named by
+    ``write_pages`` (sentinel entries skip — shared prefix pages are
+    never rewritten), and the slot's page table set to ``table_row``;
+  * ``gather_prefix(slot_caches, ckpt, rows)`` — rebuild a dense batch-1
+    prefill cache from a carry *checkpoint* plus pool pages (the
+    prefix-hit resume path);
+  * ``strip_checkpoint(meta, caches)`` — a batch-1 cache minus its paged
+    KV: the fixed-size GOOM/SSM carries, windowed KV buffers, and
+    position indexes captured at page boundaries during chunked prefill;
+  * ``clear_slot_pages(slot_caches, slot)`` — reset a released slot's
+    page tables to the sentinel so its dead-weight decodes stop writing
+    into pages that may be reassigned;
+  * ``write_slot`` / ``read_slot`` — legacy dense row scatter/gather
+    (``read_slot`` also understands paged trees).
 
-Why slots are cheap here: a GOOM/SSM layer's recurrent state is a few
-``(d, d)``-sized tensors per sequence *regardless of context length*, so
-an evicted slot is reusable by any new request without compaction,
-paging, or prefix bookkeeping — the only per-token storage is the
-attention layers' KV pages (absent entirely in the paper's GOOM-RNN).
-See docs/serving.md for the slot lifecycle.
+host-side bookkeeping (allocation is control flow, not device work):
+
+  * ``SlotAllocator`` — free list over slot rows;
+  * ``PagePool`` — refcounted page free list (a page is held by every
+    slot whose table references it plus the prefix index; it frees only
+    at refcount zero, so eviction can never free a referenced page);
+  * ``PrefixIndex`` — a radix trie over ``page_size``-token blocks
+    mapping cached prompt prefixes to (pool page, carry checkpoint);
+    ``match(tokens)`` returns the longest indexed block-prefix so
+    admission resumes chunked prefill at the divergence point, and
+    leaf-first LRU eviction reclaims index-only pages under pressure.
+
+Why this is cheap here: a GOOM/SSM layer's recurrent state is a few
+``(d, d)``-sized tensors per sequence *regardless of context length*
+(the paper's fixed-size scan carry), so a checkpoint node costs
+kilobytes and restores the recurrence *exactly* — something paged-KV
+designs over pure attention cannot do.  See docs/serving.md.
 """
 
 from __future__ import annotations
 
 import heapq
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
-def abstract_slot_caches(model, max_slots: int, page_len: int):
+def abstract_slot_caches(model, max_slots: int, page_len: int, **kw):
     """ShapeDtypeStruct tree of the slot caches (no allocation)."""
-    return jax.eval_shape(lambda: model.init_slot_caches(max_slots, page_len))
+    return jax.eval_shape(
+        lambda: model.init_slot_caches(max_slots, page_len, **kw))
 
 
-def slot_cache_bytes(model, max_slots: int, page_len: int) -> dict:
+def slot_cache_bytes(model, max_slots: int, page_len: int, **kw) -> dict:
     """Byte cost of a serving config, from shapes alone.
 
     Returns ``{"total", "per_slot", "kv_pages", "recurrent"}`` (bytes) —
-    ``kv_pages`` counts the attention K/V leaves (the part that scales
-    with ``page_len``), ``recurrent`` everything else.
+    ``kv_pages`` counts the attention K/V leaves (dense rows or pool
+    pages: the part that scales with ``page_len``), ``recurrent``
+    everything else.  Extra ``init_slot_caches`` kwargs (``page_size``,
+    ``cache_pages``) pass through.
     """
-    tree = abstract_slot_caches(model, max_slots, page_len)
+    tree = abstract_slot_caches(model, max_slots, page_len, **kw)
     kv = rec = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
@@ -66,12 +90,36 @@ def slot_cache_bytes(model, max_slots: int, page_len: int) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# tree walkers (device-side, jit-able)
+# ---------------------------------------------------------------------------
+def _is_paged_attn(node) -> bool:
+    return isinstance(node, dict) and "pages" in node and "k" in node
+
+
+def paged_meta(caches):
+    """Parallel pure-python skeleton marking paged attention dicts.
+
+    Built once (from ``jax.eval_shape`` of the slot caches) so walkers
+    over *dense* trees — which carry no ``pages`` key — still know which
+    attention layers are paged.  ``"paged"`` at a paged attn dict, nested
+    lists/dicts elsewhere, ``None`` at leaves."""
+    if isinstance(caches, (list, tuple)):
+        return [paged_meta(c) for c in caches]
+    if _is_paged_attn(caches):
+        return "paged"
+    if isinstance(caches, dict):
+        return {k: paged_meta(v) for k, v in caches.items()}
+    return None
+
+
 def write_slot(slot_caches, src_caches, slot) -> Any:
     """Scatter sequence 0 of a batch-1 cache tree into row ``slot``.
 
     Leaf-wise ``dst.at[slot].set(src[0])``: every output leaf aliases its
     input leaf, so a jit of this with the slot caches donated updates the
-    resident state in place.
+    resident state in place.  Dense (non-paged) slot caches only — the
+    engine's paged path goes through :func:`write_slot_paged`.
     """
     return jax.tree.map(
         lambda dst, src: dst.at[slot].set(src[0].astype(dst.dtype)),
@@ -79,11 +127,140 @@ def write_slot(slot_caches, src_caches, slot) -> Any:
     )
 
 
+def write_slot_paged(slot_caches, src_caches, slot, write_pages,
+                     table_row) -> Any:
+    """Scatter a batch-1 cache into row ``slot`` of a paged slot tree.
+
+    ``write_pages``/``table_row`` are ``(max_blocks,)`` int32 page-id
+    vectors, shared by every paged layer (one logical page id indexes
+    each layer's pool):
+
+    * ``write_pages[b]`` — the pool page that receives the dense cache's
+      block b of K/V.  The sentinel id (``n_pages``) skips the write:
+      shared prefix pages already hold identical bits and must never be
+      rewritten while other slots read them;
+    * ``table_row[b]`` — the slot's page table entry for block b (real
+      ids for owned *and* shared blocks).
+
+    Recurrent / windowed / index leaves scatter by row as in
+    :func:`write_slot`; all outputs alias inputs 1:1 (donation-safe).
+    """
+    def walk(dst, src):
+        if isinstance(dst, (list, tuple)):
+            return [walk(d, s) for d, s in zip(dst, src)]
+        if _is_paged_attn(dst):
+            ps = dst["k"].shape[1]
+            mb = dst["pages"].shape[1]
+            kb = src["k"][0].reshape((mb, ps) + src["k"].shape[2:])
+            vb = src["v"][0].reshape((mb, ps) + src["v"].shape[2:])
+            return {
+                "k": dst["k"].at[write_pages].set(kb.astype(dst["k"].dtype)),
+                "v": dst["v"].at[write_pages].set(vb.astype(dst["v"].dtype)),
+                "pages": dst["pages"].at[slot].set(table_row),
+                "index": dst["index"].at[slot].set(src["index"][0]),
+            }
+        if isinstance(dst, dict):
+            return {k: walk(dst[k], src[k]) for k in dst}
+        return dst.at[slot].set(src[0].astype(dst.dtype))
+
+    return walk(slot_caches, src_caches)
+
+
 def read_slot(slot_caches, slot) -> Any:
-    """Gather row ``slot`` as a batch-1 cache tree (inverse of write)."""
-    return jax.tree.map(lambda leaf: leaf[slot][None], slot_caches)
+    """Gather row ``slot`` as a batch-1 cache tree (inverse of write).
+
+    Paged attention layers are densified through the slot's page table
+    (sentinel entries read as zeros), so the result is a valid dense
+    batch-1 cache either way."""
+    def walk(node):
+        if isinstance(node, (list, tuple)):
+            return [walk(n) for n in node]
+        if _is_paged_attn(node):
+            rows = node["pages"][slot]                     # (max_blocks,)
+            ok = (rows < node["k"].shape[0])[:, None, None, None]
+            flat = (1, -1) + node["k"].shape[2:]
+            return {
+                "k": jnp.where(ok, node["k"][rows], 0).reshape(flat),
+                "v": jnp.where(ok, node["v"][rows], 0).reshape(flat),
+                "index": node["index"][slot][None],
+            }
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node[slot][None]
+
+    return walk(slot_caches)
 
 
+def strip_checkpoint(meta, caches) -> Any:
+    """A batch-1 prefill cache minus its paged K/V: the carry checkpoint.
+
+    Keeps every fixed-size leaf — GOOM/SSM recurrent states, windowed
+    rolling KV buffers, token-shift stubs, attention indexes — and drops
+    only the K/V of paged (global) attention layers, whose blocks live in
+    the pool.  ``meta`` comes from :func:`paged_meta` (the dense tree
+    itself cannot tell paged layers apart).  Jit it: the outputs are then
+    fresh buffers, safe against the chunk loop donating the source."""
+    if isinstance(caches, (list, tuple)):
+        return [strip_checkpoint(m, c) for m, c in zip(meta, caches)]
+    if meta == "paged":
+        return {"index": caches["index"]}
+    if isinstance(caches, dict):
+        return {k: strip_checkpoint(meta[k], v) for k, v in caches.items()}
+    return caches
+
+
+def gather_prefix(slot_caches, ckpt, rows) -> Any:
+    """Rebuild a dense batch-1 prefill cache from checkpoint + pool pages.
+
+    ``rows`` is one ``(max_blocks,)`` page-id vector (the matched prefix
+    blocks, sentinel past the hit): paged layers gather those pool pages
+    into dense K/V — sentinel entries become exact zeros, matching a
+    fresh cache bit-for-bit — while every other leaf comes from the
+    checkpoint (which carries ``index == hit_len``).  The resume path:
+    ``ChunkedPrefill(..., start=hit_len)`` continues from the result as
+    if it had just prefilled the prefix itself."""
+    def walk(sc, ck):
+        if isinstance(sc, (list, tuple)):
+            return [walk(s, c) for s, c in zip(sc, ck)]
+        if _is_paged_attn(sc):
+            ok = (rows < sc["k"].shape[0])[:, None, None, None]
+            flat = (1, -1) + sc["k"].shape[2:]
+            return {
+                "k": jnp.where(ok, sc["k"][rows], 0).reshape(flat),
+                "v": jnp.where(ok, sc["v"][rows], 0).reshape(flat),
+                "index": ck["index"],
+            }
+        if isinstance(sc, dict):
+            return {k: walk(sc[k], ck[k]) for k in sc}
+        return ck
+
+    return walk(slot_caches, ckpt)
+
+
+def clear_slot_pages(slot_caches, slot) -> Any:
+    """Reset row ``slot``'s page tables to the sentinel id.
+
+    A released slot keeps decoding dead weight (static shapes); pointing
+    its table at the sentinel turns those KV writes into dropped
+    scatters, so pages freed back to the pool — possibly reassigned to
+    other slots or held by the prefix index — are never corrupted.
+    Outputs alias inputs 1:1 (donation-safe)."""
+    def walk(node):
+        if isinstance(node, (list, tuple)):
+            return [walk(n) for n in node]
+        if _is_paged_attn(node):
+            sentinel = jnp.int32(node["k"].shape[0])
+            return dict(node, pages=node["pages"].at[slot].set(sentinel))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(slot_caches)
+
+
+# ---------------------------------------------------------------------------
+# host-side allocators
+# ---------------------------------------------------------------------------
 class SlotAllocator:
     """Host-side free list over ``max_slots`` cache rows.
 
@@ -128,3 +305,198 @@ class SlotAllocator:
             raise ValueError(f"slot {slot} is already free (double release)")
         self._used.remove(slot)
         heapq.heappush(self._free, slot)
+
+
+class PagePool:
+    """Refcounted host-side free list over the KV page pool.
+
+    One logical page id addresses the same row of every paged layer's
+    pool, so the whole model's per-block KV is one allocation unit.  A
+    page's holders are (a) each slot whose page table references it and
+    (b) the prefix index node that published it; it returns to the free
+    list only when the last holder unrefs — freeing a referenced page is
+    structurally impossible, and double-free raises.  Lowest id first
+    (min-heap) for determinism."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = n_pages
+        self.sentinel = n_pages          # the dropped-scatter page id
+        self._free: List[int] = list(range(n_pages))  # already a heap
+        self._rc: List[int] = [0] * n_pages
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._rc[page]
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` pages (refcount 1 each), or None if short —
+        all-or-nothing so a failed admission leaks nothing."""
+        if n > len(self._free):
+            return None
+        pages = [heapq.heappop(self._free) for _ in range(n)]
+        for p in pages:
+            self._rc[p] = 1
+        return pages
+
+    def ref(self, page: int) -> None:
+        if not (0 <= page < self.n_pages) or self._rc[page] < 1:
+            raise ValueError(f"ref of unallocated page {page}")
+        self._rc[page] += 1
+
+    def unref(self, page: int) -> bool:
+        """Drop one reference; True when this freed the page."""
+        if not (0 <= page < self.n_pages) or self._rc[page] < 1:
+            raise ValueError(f"unref of free page {page} (double free)")
+        self._rc[page] -= 1
+        if self._rc[page] == 0:
+            heapq.heappush(self._free, page)
+            return True
+        return False
+
+
+class _PrefixNode:
+    __slots__ = ("key", "parent", "children", "page", "ckpt", "tick")
+
+    def __init__(self, key, parent, page, ckpt, tick):
+        self.key = key                   # tuple of page_size token ids
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.page = page                 # pool page id (one index ref held)
+        self.ckpt = ckpt                 # carry checkpoint at this block's end
+        self.tick = tick                 # LRU clock
+
+
+class PrefixIndex:
+    """Host-side radix trie over token blocks: prompt prefix -> cache.
+
+    Keyed on ``page_size``-token tuples (one trie level per KV page, the
+    ``kvcache.match(req.all_ids)`` shape): each node owns one pool page
+    (refcounted via ``PagePool``) and the carry checkpoint taken at that
+    block's end during chunked prefill.  ``match`` walks the longest
+    indexed block-prefix of a prompt; ``publish`` inserts a request's
+    freshly prefilled blocks after admission (synchronously, so requests
+    queued behind it in the same step already hit).
+
+    Eviction is leaf-first LRU: dropping a leaf releases only the
+    *index's* reference — pages shared with live slots stay allocated,
+    and interior nodes are never dropped while children need their prefix
+    chain.  Repeated eviction can always drain the index completely, so
+    a pool sized ``max_slots * max_blocks + cache_pages`` can always
+    serve an admission."""
+
+    def __init__(self, pool: PagePool, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.pool = pool
+        self.page_size = page_size
+        self._root = _PrefixNode((), None, None, None, 0)
+        self._tick = 0
+        self.n_nodes = 0
+        self.n_lookups = 0
+        self.n_hits = 0
+        self.n_hit_tokens = 0
+        self.n_evicted = 0
+
+    def match(self, tokens: Sequence[int],
+              max_blocks: Optional[int] = None):
+        """Longest indexed block-prefix of ``tokens``.
+
+        Returns ``(hit_blocks, page_ids, ckpt)``: the page for each
+        matched block plus the carry checkpoint at ``hit_blocks *
+        page_size`` (None on a miss).  ``max_blocks`` caps the walk (the
+        engine passes the last block it may resume from, so at least the
+        prompt's final piece is always reprocessed for its logits).
+        Matched nodes are LRU-touched; the caller must take its own page
+        refs before anything can evict."""
+        self.n_lookups += 1
+        self._tick += 1
+        ps = self.page_size
+        limit = len(tokens) // ps
+        if max_blocks is not None:
+            limit = min(limit, max_blocks)
+        node, pages, ckpt = self._root, [], None
+        for b in range(limit):
+            child = node.children.get(tuple(tokens[b * ps:(b + 1) * ps]))
+            if child is None:
+                break
+            child.tick = self._tick
+            pages.append(child.page)
+            ckpt = child.ckpt
+            node = child
+        if pages:
+            self.n_hits += 1
+            self.n_hit_tokens += len(pages) * ps
+        return len(pages), pages, ckpt
+
+    def publish(self, tokens: Sequence[int], pages: Sequence[int],
+                ckpts: Sequence[Any]) -> int:
+        """Insert blocks ``0..len(pages)`` of ``tokens`` into the trie.
+
+        ``ckpts[b]`` is the checkpoint at ``(b+1) * page_size`` — None
+        for blocks whose node must already exist (the matched prefix the
+        request resumed from).  Creating a node takes one pool ref on its
+        page; existing nodes are left untouched (the duplicate page stays
+        slot-owned and frees with the slot).  Stops at the first gap.
+        Returns the number of nodes created."""
+        self._tick += 1
+        ps = self.page_size
+        node, created = self._root, 0
+        for b, (page, ckpt) in enumerate(zip(pages, ckpts)):
+            key = tuple(tokens[b * ps:(b + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                if ckpt is None:
+                    break
+                child = _PrefixNode(key, node, page, ckpt, self._tick)
+                node.children[key] = child
+                self.pool.ref(page)
+                self.n_nodes += 1
+                created += 1
+            else:
+                child.tick = self._tick
+            node = child
+        return created
+
+    def _leaves(self) -> List[_PrefixNode]:
+        out, stack = [], list(self._root.children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            else:
+                out.append(node)
+        return out
+
+    def evict_one(self) -> bool:
+        """Drop the least-recently-used leaf; False when the trie is
+        empty.  Only the index's page reference is released — a page
+        still held by slots survives untouched."""
+        leaves = self._leaves()
+        if not leaves:
+            return False
+        victim = min(leaves, key=lambda n: n.tick)
+        del victim.parent.children[victim.key]
+        self.pool.unref(victim.page)
+        self.n_nodes -= 1
+        self.n_evicted += 1
+        return True
+
+    def reserve(self, n: int) -> bool:
+        """Evict until the pool can serve ``n`` pages (True on success)."""
+        while self.pool.n_free < n:
+            if not self.evict_one():
+                return False
+        return True
+
+    def clear(self) -> None:
+        while self.evict_one():
+            pass

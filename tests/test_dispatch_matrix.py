@@ -128,6 +128,28 @@ def test_platform_read_once_and_stable_under_jit(monkeypatch):
     assert len(set(resolved_inside)) == 1  # traced once, one stable answer
 
 
+def test_serve_donate_uses_cached_platform(monkeypatch):
+    """serve.prefill._donate routes through the cached current_platform —
+    never a direct jax.default_backend() read per jit construction."""
+    from repro.serve.prefill import _donate
+
+    calls = {"n": 0}
+    real = jax.default_backend
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(jax, "default_backend", counting)
+    dispatch.current_platform()  # primed (lru_cache)
+    calls["n"] = 0
+    for _ in range(5):
+        out = _donate((2,))
+    assert calls["n"] == 0, "_donate re-read jax.default_backend()"
+    expected = (2,) if dispatch.current_platform() != "cpu" else ()
+    assert out == expected
+
+
 def test_config_push_stamps_platform(monkeypatch):
     with engine.use_backend("auto") as cfg:
         assert cfg.platform == jax.default_backend()

@@ -151,7 +151,8 @@ def test_status_schema_and_healthz(server):
                                    "/healthz") == {"ok": True}
     snap = api_client.get_status(server.host, server.port)
     assert set(snap) >= {"uptime_s", "requests", "throughput",
-                         "latency_ms", "busy_slots", "engine"}
+                         "latency_ms", "busy_slots", "engine",
+                         "prefix_cache"}
     assert set(snap["requests"]) == {"submitted", "finished", "rejected",
                                      "by_finish_reason"}
     assert set(snap["throughput"]) == {"tokens_total", "tokens_per_s",
@@ -167,6 +168,38 @@ def test_status_schema_and_healthz(server):
     assert snap["requests"]["finished"] >= 1
     assert snap["throughput"]["tokens_total"] >= 1
     assert snap["latency_ms"]["decode_step"]["p50"] > 0
+    # prefix-cache gauges (satellite: hit rate / tokens saved / occupancy)
+    pc = snap["prefix_cache"]
+    assert set(pc) == {"enabled", "lookups", "hits", "hit_rate",
+                       "hit_tokens", "prefill_tokens_saved", "nodes",
+                       "evicted", "page_size", "pages"}
+    assert set(pc["pages"]) == {"total", "used", "free", "occupancy"}
+    assert pc["enabled"] is True
+    assert pc["lookups"] >= 1  # warmup + this module's completions
+    assert 0.0 <= pc["hit_rate"] <= 1.0
+    assert 0.0 <= pc["pages"]["occupancy"] <= 1.0
+    assert pc["pages"]["used"] + pc["pages"]["free"] == pc["pages"]["total"]
+    assert eng["page_size"] == snap["prefix_cache"]["page_size"]
+    assert eng["prefix_reuse"] is True
+
+
+def test_status_prefix_hits_after_shared_prefix_traffic(server):
+    """Two completions sharing a long prefix: the second hits, and the
+    gauges in /status move (hit-rate visible over the wire)."""
+    server.wait_idle()
+    shared = list(range(1, 13))  # 3 pages at chunk=4
+    api_client.completion(server.host, server.port,
+                          {"prompt": shared + [40], "max_tokens": 2})
+    pre = api_client.get_status(server.host,
+                                server.port)["prefix_cache"]
+    api_client.completion(server.host, server.port,
+                          {"prompt": shared + [50, 51], "max_tokens": 2})
+    server.wait_idle()
+    post = api_client.get_status(server.host,
+                                 server.port)["prefix_cache"]
+    assert post["hits"] > pre["hits"]
+    assert post["prefill_tokens_saved"] > pre["prefill_tokens_saved"]
+    assert post["nodes"] >= 1 and post["pages"]["used"] >= post["nodes"]
 
 
 def test_error_paths(server):

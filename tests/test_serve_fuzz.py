@@ -8,7 +8,14 @@ Every script must leave the engine in a clean terminal state:
   (b) the SlotAllocator neither leaks nor double-frees — ``n_used``
       returns to 0 and every slot is allocatable again;
   (c) cancelled uids are never in ``_results`` and read back as the
-      ``CANCELLED`` sentinel.
+      ``CANCELLED`` sentinel;
+  (d) page refcounts stay exactly consistent with their holders: every
+      pool page's refcount equals (# slot tables holding it) + (# prefix
+      index nodes holding it) — no leak, no double-free, and eviction
+      can never free a page a live slot still reads (its slot ref keeps
+      the count positive).  The shared engine's prompts repeat across
+      scripts, so the prefix index takes real hits and shares real pages
+      between slots mid-script.
 
 Two drivers over the same script interpreter: a hypothesis property
 (skipped gracefully when hypothesis is absent, via hyp_compat) and a
@@ -79,6 +86,27 @@ def _setup():
     return _Shared
 
 
+def _check_pages(eng):
+    """Invariant (d): refcount(page) == slot refs + index refs, exactly."""
+    from collections import Counter
+
+    pool, idx = eng._pool, eng._index
+    held = Counter(p for pages in eng._slot_pages.values() for p in pages)
+    stack = list(idx._root.children.values())
+    n_nodes = 0
+    while stack:
+        node = stack.pop()
+        held[node.page] += 1
+        n_nodes += 1
+        stack.extend(node.children.values())
+    assert n_nodes == idx.n_nodes
+    for p in range(pool.n_pages):
+        assert pool.refcount(p) == held.get(p, 0), (
+            f"page {p}: rc={pool.refcount(p)} holders={held.get(p, 0)}")
+    assert pool.n_used == len(held)
+    assert set(eng._slot_pages) == set(eng._active)
+
+
 def _expected(prompt_idx, budget, eos_id):
     """Reference output under greedy prefix-stability + EOS truncation."""
     toks = _Shared.refs[prompt_idx][:budget]
@@ -118,12 +146,16 @@ def _run_script(words):
                 cancelled.add(uid)
             else:  # already finished: cancel-after-terminal is a no-op
                 live.append(uid)
+        _check_pages(eng)  # (d) holds at every intermediate state
     while eng.has_work:
         eng.step()
     # (b) no slot leaked or double-freed
     assert eng.n_active == 0 and eng._alloc.n_used == 0
     assert eng._alloc.n_free == MAX_SLOTS
     assert eng._n_deadlines == 0
+    # (d) terminal: only the prefix index holds pages (one per node)
+    _check_pages(eng)
+    assert eng._pool.n_used == eng._index.n_nodes
     for uid in expected:
         if uid in cancelled:
             # (c) cancelled: sentinel, never a results entry
@@ -196,3 +228,90 @@ def test_fuzz_eos_stops_and_cancels_reach_terminal_reasons():
     assert eng.finish_reason(u2) == "stop"
     assert eng.pop_result(u2)[-1] == sh.eos_pool[1]
     assert eng._alloc.n_used == 0
+
+
+# -- page pool / prefix index unit invariants --------------------------------
+def test_page_pool_refcounts_no_double_free():
+    from repro.serve import PagePool
+
+    pool = PagePool(4)
+    pages = pool.alloc(3)
+    assert pages == [0, 1, 2] and pool.n_used == 3
+    assert pool.alloc(2) is None          # all-or-nothing: 1 < 2
+    assert pool.n_free == 1               # the failed alloc leaked nothing
+    pool.ref(pages[0])
+    assert pool.unref(pages[0]) is False  # rc 2 -> 1: still held
+    assert pool.unref(pages[0]) is True   # rc 1 -> 0: freed
+    with pytest.raises(ValueError):
+        pool.unref(pages[0])              # double free
+    with pytest.raises(ValueError):
+        pool.ref(pages[0])                # ref of a free page
+    assert pool.unref(pages[1]) and pool.unref(pages[2])
+    assert pool.n_used == 0 and pool.n_free == 4
+
+
+def test_prefix_index_eviction_never_frees_referenced_page():
+    from repro.serve import PagePool, PrefixIndex
+
+    pool = PagePool(4)
+    idx = PrefixIndex(pool, page_size=2)
+    pages = pool.alloc(2)
+    idx.publish([1, 2, 3, 4], pages, ["ck0", "ck1"])
+    assert idx.n_nodes == 2 and pool.refcount(pages[0]) == 2
+    pool.unref(pages[0])  # the "slot" releases; index ref remains
+    pool.unref(pages[1])
+    pool.ref(pages[0])    # a new slot takes a prefix hit on block 0
+    assert idx.reserve(3) is True   # evicting the leaf frees one page
+    assert idx.n_nodes == 1 and idx.n_evicted == 1
+    assert pool.refcount(pages[1]) == 0 and pool.n_free == 3
+    # demanding more than evictable: the slot-held page survives a full
+    # index drain — eviction can never free a referenced page
+    assert idx.reserve(4) is False
+    assert idx.n_nodes == 0 and idx.n_evicted == 2
+    assert pool.refcount(pages[0]) == 1
+    assert pool.n_free == 3
+
+
+def test_prefix_index_match_and_lru():
+    from repro.serve import PagePool, PrefixIndex
+
+    pool = PagePool(8)
+    idx = PrefixIndex(pool, page_size=2)
+    pa = pool.alloc(2)
+    idx.publish([1, 2, 3, 4], pa, ["a0", "a1"])
+    pb = pool.alloc(1)
+    idx.publish([1, 2, 9, 9], [pa[0], pb[0]], [None, "b1"])
+    assert idx.n_nodes == 3  # shared first block: node reused, not re-refed
+    assert pool.refcount(pa[0]) == 2  # alloc ref + index ref (once)
+    n, pages, ck = idx.match([1, 2, 3, 4, 5], None)
+    assert (n, pages, ck) == (2, pa, "a1")
+    n, pages, ck = idx.match([1, 2, 9, 9], 1)  # limit caps the walk
+    assert (n, ck) == (1, "a0")
+    assert idx.match([7, 7, 7, 7], None)[0] == 0
+    # LRU: branch b's leaf was touched least recently after matching a
+    idx.match([1, 2, 3, 4], None)
+    for p in pa + pb:
+        pool.unref(p)  # drop alloc refs: index is now sole holder
+    assert idx.evict_one() is True
+    assert pool.refcount(pb[0]) == 0  # b's leaf went first
+    stats_hits = idx.n_hits
+    assert idx.n_lookups == 4 and stats_hits == 3
+
+
+def test_engine_eviction_under_page_pressure():
+    """Tiny cache_pages: distinct prompts force index eviction, yet
+    admission always succeeds and refcounts stay consistent."""
+    sh = _setup()
+    model_engine = sh.engine
+    eng = Engine(model_engine.model, model_engine.params, max_slots=2,
+                 page_len=PAGE_LEN, chunk=4, cache_pages=2)
+    rng = random.Random(7)
+    for i in range(6):
+        prompt = [rng.randrange(1, 200) for _ in range(9)]  # 2 full blocks
+        eng.submit(Request(uid=f"ev{i}", prompt=prompt, max_new_tokens=3))
+    while eng.has_work:
+        eng.step()
+        _check_pages(eng)
+    assert eng._index.n_evicted > 0          # pressure really evicted
+    assert eng._pool.n_used == eng._index.n_nodes
+    _check_pages(eng)

@@ -1,0 +1,182 @@
+"""Cross-request prefix reuse: resume-from-checkpoint parity + accounting.
+
+Three layers of guarantees:
+
+* **engine carry ops** — a GOOM scan carry saved at a page boundary and
+  resumed later reproduces the uninterrupted scan at e±200 dynamic range
+  (the checkpoint really is the whole recurrent state);
+* **scheduler** — a warm prefix hit produces *bit-identical* outputs to
+  the from-scratch path across chunk sizes {1, 7, 64} and divergence
+  points (mid-page, page boundary, full-prefix resubmit), while issuing
+  exactly the suffix's prefill dispatches (asserted via the prefill's
+  call counters) — prefill cost is O(suffix) on hits;
+* **accounting** — hit/saved counters in ``Engine.prefix_stats()`` match
+  the work actually skipped.
+
+Bit-identity holds because ``page_size`` defaults to the prefill chunk:
+a resumed prefill replays the exact chunk schedule of the from-scratch
+one, and densified pool pages are the very buffers the original prefill
+wrote (zeros past the hit, as in a fresh cache).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import engine
+from repro.core.goom import Goom, to_goom
+from repro.models.common import unzip
+from repro.models.model import DecoderLM
+from repro.serve import Engine, Request
+
+CHUNKS = (1, 7, 64)
+
+
+# ---------------------------------------------------------------------------
+# carry checkpoints: save at a page boundary, resume, match the full scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("split", (8, 64, 128))
+def test_diagonal_carry_checkpoint_resume_e200(split):
+    """Resuming from a saved carry == the uninterrupted scan, at log
+    magnitudes past ±200 (growing and decaying channels)."""
+    t, c = 150, 8
+    drift = jnp.where(jnp.arange(c) % 2 == 0, 2.0, -2.0)
+    a = Goom(drift[None] + jax.random.uniform(
+        jax.random.PRNGKey(0), (t, c), minval=-0.5, maxval=0.5),
+        jnp.ones((t, c)))
+    b = to_goom(jax.random.normal(jax.random.PRNGKey(1), (t, c)))
+    full = engine.diagonal_scan(a, b)
+    assert float(jnp.max(jnp.abs(full.log_abs))) > 200.0
+    # "prefill" the prefix, checkpoint the carry, resume on the suffix
+    _, ckpt = engine.diagonal_scan_carry(
+        Goom(a.log_abs[:split], a.sign[:split]),
+        Goom(b.log_abs[:split], b.sign[:split]), None)
+    states, _ = engine.diagonal_scan_carry(
+        Goom(a.log_abs[split:], a.sign[split:]),
+        Goom(b.log_abs[split:], b.sign[split:]), ckpt)
+    np.testing.assert_allclose(states.log_abs, full.log_abs[split:],
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_array_equal(states.sign, full.sign[split:])
+
+
+@pytest.mark.parametrize("split", (8, 64, 128))
+def test_matrix_carry_checkpoint_resume_e200(split):
+    t, d = 150, 4
+    a = to_goom(jnp.abs(jax.random.normal(jax.random.PRNGKey(2),
+                                          (t, d, d))) * 4.0)
+    b = to_goom(jnp.abs(jax.random.normal(jax.random.PRNGKey(3),
+                                          (t, d, 1))))
+    full = engine.matrix_scan(a, b)
+    assert float(jnp.max(jnp.abs(full.log_abs))) > 200.0
+    _, ckpt = engine.matrix_scan_carry(
+        Goom(a.log_abs[:split], a.sign[:split]),
+        Goom(b.log_abs[:split], b.sign[:split]), None)
+    states, _ = engine.matrix_scan_carry(
+        Goom(a.log_abs[split:], a.sign[split:]),
+        Goom(b.log_abs[split:], b.sign[split:]), ckpt)
+    np.testing.assert_allclose(states.log_abs, full.log_abs[split:],
+                               rtol=1e-6, atol=1e-4)
+    np.testing.assert_array_equal(states.sign, full.sign[split:])
+
+
+# ---------------------------------------------------------------------------
+# scheduler: warm hits are bit-identical and dispatch only the suffix
+# ---------------------------------------------------------------------------
+_STATE = {}
+
+
+def _model():
+    if "model" not in _STATE:
+        cfg = get_config("goom-rnn-124m", smoke=True)
+        model = DecoderLM(cfg)
+        params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+        _STATE["model"] = (cfg, model, params)
+    return _STATE["model"]
+
+
+def _run_one(eng, uid, prompt, n_new=4):
+    eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=n_new))
+    while eng.has_work:
+        eng.step()
+    return eng.pop_result(uid)
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_prefix_hit_bit_identical_and_suffix_only(chunk):
+    cfg, model, params = _model()
+    page_len = 192 if chunk == 64 else 64
+    shared_len = 130 if chunk == 64 else 30
+    rng = np.random.default_rng(chunk)
+    shared = rng.integers(1, cfg.vocab, size=shared_len).tolist()
+    ps = chunk  # engine default: page boundaries == chunk boundaries
+    # divergence points: mid-page (suffix breaks inside a block), page
+    # boundary (suffix starts exactly at a block edge), and a full-prefix
+    # resubmit of an identical prompt
+    prompts = [
+        shared + rng.integers(1, cfg.vocab, size=5).tolist(),       # cold
+        shared[:shared_len - ps // 2 - 1]
+        + rng.integers(1, cfg.vocab, size=7).tolist(),              # mid-page
+        shared[:(shared_len // ps) * ps]
+        + rng.integers(1, cfg.vocab, size=6).tolist(),              # boundary
+        None,                                                       # resubmit
+    ]
+    prompts[3] = list(prompts[0])
+
+    eng_on = Engine(model, params, max_slots=2, page_len=page_len,
+                    chunk=chunk, prefix_reuse=True)
+    eng_off = Engine(model, params, max_slots=2, page_len=page_len,
+                     chunk=chunk, prefix_reuse=False)
+    for i, prompt in enumerate(prompts):
+        pre_chunk = eng_on._prefill.n_chunk_calls
+        pre_tail = eng_on._prefill.n_tail_calls
+        pre_saved = eng_on.prefix_stats()["prefill_tokens_saved"]
+        out_on = _run_one(eng_on, f"u{i}", prompt)
+        out_off = _run_one(eng_off, f"u{i}", prompt)
+        assert out_on == out_off, (chunk, i)  # bit-identical greedy path
+        # dispatch accounting: exactly the suffix's chunks + tails ran
+        p = len(prompt)
+        fused = p - (1 if p % chunk else chunk)
+        hit = eng_on.prefix_stats()["prefill_tokens_saved"] - pre_saved
+        assert hit % chunk == 0  # chunk-aligned resume only
+        n_chunk = eng_on._prefill.n_chunk_calls - pre_chunk
+        n_tail = eng_on._prefill.n_tail_calls - pre_tail
+        assert n_chunk == (fused - hit) // chunk, (chunk, i)
+        assert n_tail == (fused - hit) % chunk, (chunk, i)
+        if i > 0:  # warm: the shared prefix must actually hit
+            assert hit > 0, (chunk, i)
+        if i == 3:  # identical resubmit: everything before fused hits
+            assert hit == (fused // ps) * ps, (chunk, i)
+    stats = eng_on.prefix_stats()
+    assert stats["hits"] == 3 and stats["lookups"] == 4
+    assert stats["prefill_tokens_saved"] == stats["hit_tokens"]
+    off = eng_off.prefix_stats()
+    assert off["enabled"] is False and off["hits"] == 0
+
+
+def test_prefix_hit_rate_and_pool_occupancy_reporting():
+    cfg, model, params = _model()
+    eng = Engine(model, params, max_slots=2, page_len=64, chunk=8)
+    shared = list(range(1, 25))  # 3 full pages
+    _run_one(eng, "a", shared + [50, 51])
+    st0 = eng.prefix_stats()
+    assert st0["nodes"] > 0 and st0["pages"]["used"] == st0["nodes"]
+    _run_one(eng, "b", shared + [60, 61, 62])
+    st1 = eng.prefix_stats()
+    assert st1["hits"] == 1 and 0 < st1["hit_rate"] < 1
+    assert st1["prefill_tokens_saved"] >= 16
+    assert 0 < st1["pages"]["occupancy"] < 1
+    assert st1["pages"]["used"] + st1["pages"]["free"] == st1["pages"]["total"]
+
+
+def test_divergent_first_block_never_hits():
+    """Prompts sharing no block with the cache run fully cold (and the
+    lookup is counted as a miss)."""
+    cfg, model, params = _model()
+    eng = Engine(model, params, max_slots=2, page_len=64, chunk=8)
+    _run_one(eng, "a", list(range(1, 20)))
+    pre = eng._prefill.n_chunk_calls
+    _run_one(eng, "b", list(range(100, 119)))
+    assert eng.prefix_stats()["hits"] == 0
+    assert eng._prefill.n_chunk_calls - pre == 16 // 8  # fully cold

@@ -1,0 +1,92 @@
+"""goomcheck: static analysis enforcing GOOM numerical-safety and
+engine-architecture invariants (see docs/analysis.md).
+
+Two layers:
+
+* a **jaxpr abstract interpreter** (``jaxpr_walker`` + ``lattice``) that
+  traces the registered engine impls and the model serving entry points
+  under abstract shapes and checks log-space discipline (GC1xx);
+* an **AST architectural linter** (``rules_ast``) encoding the repo's
+  structural conventions (GC2xx).
+
+Run as ``python -m repro.analysis`` (repo mode — what CI gates) or
+import the pieces directly from tests.  Findings support line-scoped
+``# goomcheck: disable=RULE`` suppression comments.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Iterable, List, Tuple
+
+from .lattice import AbsVal, TokenSource, join, seed_tree
+from .jaxpr_walker import trace_and_walk, walk_jaxpr
+from .registry import RULES, Rule
+from .report import (AnalysisResult, Finding, apply_suppressions, dedup,
+                     format_text, to_json)
+from .rules_ast import check_registry, run_ast_rules, run_source
+from .targets import TRACED_ARCHS, run_module_traces, run_repo_targets
+
+__all__ = [
+    "AbsVal", "AnalysisResult", "Finding", "RULES", "Rule", "TokenSource",
+    "TRACED_ARCHS", "analyze_paths", "analyze_repo", "apply_suppressions",
+    "check_registry", "dedup", "format_text", "join", "repo_root",
+    "run_ast_rules", "run_module_traces", "run_repo_targets", "run_source",
+    "seed_tree", "to_json", "trace_and_walk", "walk_jaxpr",
+]
+
+
+def repo_root() -> pathlib.Path:
+    """The repository root (this file lives at src/repro/analysis/)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _iter_py(paths: Iterable[pathlib.Path]) -> List[Tuple[pathlib.Path, str]]:
+    out = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            out.extend((f, f.relative_to(p).as_posix())
+                       for f in sorted(p.rglob("*.py")))
+        else:
+            out.append((p, p.name))
+    return out
+
+
+def analyze_repo(*, trace: bool = True) -> AnalysisResult:
+    """Repo mode: AST over src/repro, GC205, and the jaxpr targets."""
+    root = repo_root()
+    src = root / "src" / "repro"
+    findings = run_ast_rules(
+        (f, f.relative_to(src).as_posix())
+        for f in sorted(src.rglob("*.py")))
+
+    from repro.kernels import dispatch
+    from repro.kernels.blocks import OPS
+
+    findings.extend(check_registry(
+        OPS, dispatch.registered_impls(), root / "tests"))
+
+    skips: List[str] = []
+    if trace:
+        traced, skips = run_repo_targets()
+        findings.extend(traced)
+    findings = apply_suppressions(dedup(findings), [src, root])
+    return AnalysisResult(findings=findings, skips=skips)
+
+
+def analyze_paths(paths: Iterable[pathlib.Path], *,
+                  trace: bool = True) -> AnalysisResult:
+    """File mode: AST rules + GOOMCHECK_TRACES over explicit paths."""
+    paths = [pathlib.Path(p) for p in paths]
+    files = _iter_py(paths)
+    findings = run_ast_rules(files)
+    skips: List[str] = []
+    if trace:
+        for f, rel in files:
+            traced, s = run_module_traces(f, rel)
+            findings.extend(traced)
+            skips.extend(s)
+    roots = [p if p.is_dir() else p.parent for p in paths]
+    findings = apply_suppressions(dedup(findings), roots)
+    return AnalysisResult(findings=findings, skips=skips)

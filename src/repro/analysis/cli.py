@@ -1,0 +1,66 @@
+"""goomcheck CLI: ``python -m repro.analysis [paths...] [--ci] [--json F]``.
+
+Two modes:
+
+* **repo mode** (no paths): AST rules over ``src/repro/**``, the GC205
+  registry-completeness check, and the jaxpr layer over the registered
+  engine impls + model decode/prefill targets.  This is what gates CI.
+* **file mode** (explicit paths): AST rules over the given files/dirs,
+  plus jaxpr traces for any module defining ``GOOMCHECK_TRACES`` — how
+  the known-bad fixture corpus is exercised.
+
+Exit status is the number of *non-suppressed* findings, clamped to 1.
+``--json`` writes the full machine-readable report (including suppressed
+findings and trace skips) — the CI artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional
+
+from . import analyze_paths, analyze_repo, repo_root
+from .report import AnalysisResult, format_text, to_json
+
+__all__ = ["main"]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="goomcheck: GOOM numerical-safety + architecture linter")
+    p.add_argument("paths", nargs="*",
+                   help="files/dirs to lint (default: the whole repo)")
+    p.add_argument("--ci", action="store_true",
+                   help="machine-oriented summary line (exit code gates)")
+    p.add_argument("--json", metavar="FILE", default=None,
+                   help="write the JSON findings report here")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip the jaxpr layer (AST rules only)")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="also print suppressed findings and trace skips")
+    args = p.parse_args(argv)
+
+    if args.paths:
+        result: AnalysisResult = analyze_paths(
+            [pathlib.Path(x) for x in args.paths], trace=not args.no_trace)
+    else:
+        result = analyze_repo(trace=not args.no_trace)
+
+    if args.json:
+        out = pathlib.Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(to_json(result))
+
+    print(format_text(result, verbose=args.verbose))
+    if args.ci:
+        mode = "repo" if not args.paths else "paths"
+        status = "clean" if result.ok else "FAILED"
+        print(f"goomcheck --ci [{mode} mode, root={repo_root()}]: {status}")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

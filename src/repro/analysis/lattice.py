@@ -1,0 +1,151 @@
+"""The per-value abstract lattice for the jaxpr layer.
+
+Each traced value carries an :class:`AbsVal`:
+
+  * ``domain`` — what the bits *mean*:
+      - ``"log"``     a log-space magnitude (a GOOM ``log_abs`` plane, or
+                      anything derived from one / from a log primitive);
+      - ``"sign"``    a GOOM sign plane ({+1, -1});
+      - ``"linear"``  an ordinary real value;
+      - ``"unknown"`` ints/bools/untracked.
+  * ``rescaled`` — for log values: a dominating max has been subtracted
+      (``x - stop_gradient(max(x))`` <= 0), so ``exp`` is bounded by 1.
+      This is DESIGN.md's overflow-vs-cancellation split: GOOMs remove
+      *overflow* only when every exit from log space is max-rescaled.
+  * ``from_log`` — for linear values: produced by ``exp`` of an
+      *unrescaled* log magnitude (an overflow already waiting to happen;
+      reductions over such values additionally bypass the LSE/LMME
+      monoid — rule GC104).
+  * ``origin`` — seed tokens of the log magnitudes this value descends
+      from; ``max_of`` — origins this value is a running maximum over.
+      ``sub(x, m)`` with ``m.max_of`` intersecting ``x.origin`` is what
+      flips ``rescaled`` on.
+
+The join is used at control-flow merges (``select_n``, ``cond`` outputs)
+and for generic elementwise propagation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import FrozenSet, Iterable, List
+
+__all__ = ["AbsVal", "join", "UNKNOWN"]
+
+_DOMAIN_ORDER = ("log", "linear", "sign", "unknown")
+
+
+@dataclasses.dataclass(frozen=True)
+class AbsVal:
+    domain: str = "unknown"
+    rescaled: bool = False
+    from_log: bool = False
+    origin: FrozenSet[int] = frozenset()
+    max_of: FrozenSet[int] = frozenset()
+
+
+UNKNOWN = AbsVal()
+
+
+def join(vals: Iterable[AbsVal]) -> AbsVal:
+    """Merge abstract values (control-flow joins, elementwise ops).
+
+    Domain joins toward the most load-bearing interpretation (log wins —
+    a value that *might* be a log magnitude must be treated as one);
+    ``rescaled`` requires every log contributor to be rescaled (adding an
+    unrescaled log back in undoes the domination); ``from_log`` is sticky.
+    """
+    vals = list(vals)
+    if not vals:
+        return UNKNOWN
+    domain = "unknown"
+    for d in _DOMAIN_ORDER:
+        if any(v.domain == d for v in vals):
+            domain = d
+            break
+    return AbsVal(
+        domain=domain,
+        rescaled=all(v.rescaled for v in vals if v.domain == "log")
+        and any(v.domain == "log" and v.rescaled for v in vals),
+        from_log=any(v.from_log for v in vals),
+        origin=frozenset().union(*(v.origin for v in vals)),
+        max_of=frozenset().union(*(v.max_of for v in vals)),
+    )
+
+
+class TokenSource:
+    """Fresh origin tokens for seed / freshly-created log magnitudes."""
+
+    def __init__(self):
+        self._next = 0
+
+    def fresh(self) -> int:
+        self._next += 1
+        return self._next
+
+
+def seed_from_spec(spec, tokens: TokenSource) -> AbsVal:
+    """AbsVal for an explicit domain name ("log" gets a fresh origin)."""
+    if spec == "log":
+        return AbsVal(domain="log", origin=frozenset({tokens.fresh()}))
+    if spec in ("linear", "sign", "unknown"):
+        return AbsVal(domain=spec)
+    raise ValueError(f"unknown domain spec {spec!r}")
+
+
+def seed_tree(tree, tokens: TokenSource) -> List[AbsVal]:
+    """Seed AbsVals for a pytree of arguments, aligned with JAX's
+    ``tree_leaves`` flatten order.
+
+    Domains come from, in priority order: an enclosing ``Goom`` (its
+    ``_goomcheck_domains`` class tag names each flattened leaf), a dict
+    key naming convention (``*log*`` -> log, ``*sign*`` -> sign — the
+    serve/model state dicts carry GOOM planes under ``"x_log"`` /
+    ``"x_sign"`` keys), else dtype (floats are linear).
+    """
+    import jax
+    import numpy as np
+
+    out: List[AbsVal] = []
+
+    def leaf(x, forced):
+        dt = getattr(x, "dtype", None)
+        if forced is not None:
+            out.append(seed_from_spec(forced, tokens))
+        elif dt is not None and np.issubdtype(np.dtype(dt), np.floating):
+            out.append(AbsVal(domain="linear"))
+        else:
+            out.append(UNKNOWN)
+
+    def rec(x, forced=None):
+        domains = getattr(type(x), "_goomcheck_domains", None)
+        if domains is not None:  # a Goom (or any tagged pytree node)
+            children, _ = type(x).tree_flatten(x)
+            for child, dom in zip(children, domains):
+                rec(child, dom)
+            return
+        if isinstance(x, dict):
+            for k in sorted(x):  # JAX flattens dicts in sorted-key order
+                kf = forced
+                if isinstance(k, str):
+                    if "log" in k:
+                        kf = "log"
+                    elif "sign" in k:
+                        kf = "sign"
+                rec(x[k], kf)
+            return
+        if isinstance(x, (list, tuple)):
+            for c in x:
+                rec(c, forced)
+            return
+        if x is None:
+            return
+        if jax.tree_util.treedef_is_leaf(jax.tree_util.tree_structure(x)):
+            leaf(x, forced)
+            return
+        # unknown custom pytree node: flatten it, seed leaves by dtype only
+        for c in jax.tree_util.tree_leaves(x):
+            leaf(c, forced)
+
+    rec(tree)
+    return out

@@ -1,0 +1,79 @@
+"""The goomcheck rule catalog.
+
+GC1xx rules run in the **jaxpr layer** (``jaxpr_walker``): an abstract
+interpreter over traced computations, propagating a per-value lattice
+(domain x rescaled-ness, see ``lattice.py``).  GC2xx rules run in the
+**AST layer** (``rules_ast``): syntactic architecture invariants that PRs
+1-8 established by convention.
+
+Every rule here must have at least one triggering fixture under
+``tests/fixtures/goomcheck/bad`` (enforced by ``tests/test_analysis.py``).
+The full prose catalog lives in ``docs/analysis.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+__all__ = ["Rule", "RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    layer: str      # "jaxpr" | "ast"
+    severity: str   # "error" | "warning"
+    title: str
+    description: str
+
+
+_CATALOG = [
+    # -- jaxpr layer (numerical safety) -------------------------------------
+    Rule("GC101", "jaxpr", "error", "exp-escape",
+         "exp applied to a log-space magnitude with no dominating "
+         "max-subtraction: the value escapes GOOM space and can overflow "
+         "(DESIGN.md: GOOMs remove overflow; a raw exp reintroduces it)."),
+    Rule("GC102", "jaxpr", "error", "log-demote",
+         "a log-space value is cast to a narrower float (f32->bf16/f16): "
+         "log-space carries need full f32 mantissa (DESIGN.md condition-"
+         "number argument); demotion silently truncates magnitudes."),
+    Rule("GC103", "jaxpr", "error", "raw-log",
+         "bare log primitive outside the safe_log wrapper: log(0) = -inf "
+         "and d/dx log = 1/x blow up; core.goom.safe_log floors the value "
+         "and redefines the derivative (paper eq. 6)."),
+    Rule("GC104", "jaxpr", "warning", "unrescaled-reduction",
+         "a reduction (sum / matmul / cumsum) over linear values produced "
+         "by exp of an unrescaled log magnitude: this bypasses the "
+         "max-rescaled LMME/LSE monoid and overflows first at the "
+         "reduction (usually paired with a GC101 at the exp site)."),
+    Rule("GC105", "jaxpr", "error", "impure-hot-path",
+         "impure primitive (debug_callback / io_callback / pure_callback) "
+         "inside a jitted hot-path computation: host round-trips stall the "
+         "dispatch-only serving loop."),
+    # -- AST layer (architecture invariants) --------------------------------
+    Rule("GC201", "ast", "error", "block-literal",
+         "matmul= / block-size keyword or BlockConfig(...) literal outside "
+         "kernels/ (+ the engine/scan plumbing): tile sizes reach call "
+         "sites only via the engine's use_blocks overrides and the "
+         "autotune cache."),
+    Rule("GC202", "ast", "error", "raw-log-exp",
+         "raw jnp.log/jnp.exp/jnp.log1p/jnp.expm1 outside core/goom.py, "
+         "core/ops.py, core/scan.py and kernels/: application code must go "
+         "through safe_log/signed_exp or a max-rescaled local pattern "
+         "(suppress with a justification where the rescale is manifest)."),
+    Rule("GC203", "ast", "error", "default-backend",
+         "jax.default_backend() outside kernels/dispatch.py: the platform "
+         "is read once per process through the cached current_platform(); "
+         "per-call reads make dispatch trace-dependent."),
+    Rule("GC204", "ast", "error", "monotonic-outside-guard",
+         "time.monotonic() in serve/scheduler.py outside _deadline_clock: "
+         "the scheduler's hot loop is dispatch-only; every clock read must "
+         "route through the deadline guard's single helper."),
+    Rule("GC205", "ast", "error", "registry-incomplete",
+         "an engine op is missing its xla_reference registration or has no "
+         "test referencing it: every op in kernels/dispatch.py needs a "
+         "reference impl (the numerical oracle) and test coverage."),
+]
+
+RULES: Dict[str, Rule] = {r.id: r for r in _CATALOG}

@@ -1,0 +1,167 @@
+"""AST layer: architectural lint rules (GC201-GC205).
+
+Rules are scoped by *relative path* (posix), so the same visitor serves
+both repo mode (paths relative to ``src/repro``) and fixture-corpus mode
+(paths relative to the corpus root — e.g. a fixture at
+``bad/serve/scheduler.py`` exercises the scheduler-only GC204 rule).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable, List, Sequence, Tuple
+
+from .registry import RULES
+from .report import Finding
+
+__all__ = ["run_ast_rules", "run_source", "check_registry",
+           "BLOCK_KWARGS", "RAW_LOGEXP"]
+
+BLOCK_KWARGS = frozenset({
+    "matmul", "block_t", "block_c", "block_n", "block_m", "block_d",
+    "num_warps", "num_stages",
+})
+RAW_LOGEXP = frozenset({"log", "exp", "log1p", "expm1"})
+
+# GC201: block/tile plumbing may only be named here
+_BLOCK_ALLOWED = ("core/engine.py", "core/scan.py")
+# GC202: the log/exp substrate (safety is checked by the jaxpr layer)
+_LOGEXP_ALLOWED = ("core/goom.py", "core/ops.py", "core/scan.py")
+# GC203: the single sanctioned jax.default_backend() read
+_BACKEND_ALLOWED = ("kernels/dispatch.py",)
+# GC204: only applies to the scheduler; only this function may read the clock
+_SCHEDULER_SUFFIX = "serve/scheduler.py"
+_CLOCK_GUARD = "_deadline_clock"
+
+
+def _in_kernels(rel: str) -> bool:
+    return rel.startswith("kernels/") or "/kernels/" in rel
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.findings: List[Finding] = []
+        self._func_stack: List[str] = []
+        self.check_blocks = not (_in_kernels(rel) or rel in _BLOCK_ALLOWED)
+        self.check_logexp = not (_in_kernels(rel) or rel in _LOGEXP_ALLOWED)
+        self.check_backend = rel not in _BACKEND_ALLOWED
+        self.check_clock = rel.endswith(_SCHEDULER_SUFFIX)
+
+    def _emit(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, file=self.rel, line=getattr(node, "lineno", 0),
+            message=message, severity=RULES[rule].severity))
+
+    # -- function context (for the GC204 guard) ------------------------------
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- calls ---------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if self.check_blocks:
+            name = func.id if isinstance(func, ast.Name) else (
+                func.attr if isinstance(func, ast.Attribute) else None)
+            if name == "BlockConfig":
+                self._emit("GC201", node,
+                           "BlockConfig(...) literal outside kernels/")
+            else:
+                for kw in node.keywords:
+                    if kw.arg in BLOCK_KWARGS:
+                        self._emit("GC201", kw.value,
+                                   f"`{kw.arg}=` keyword outside kernels/ "
+                                   "(use engine.use_blocks / the autotune "
+                                   "cache)")
+        if self.check_logexp and isinstance(func, ast.Attribute):
+            if func.attr in RAW_LOGEXP and _is_jnp(func.value):
+                self._emit("GC202", node,
+                           f"raw jnp.{func.attr} outside core/goom.py and "
+                           "kernels/ (use safe_log/signed_exp, or suppress "
+                           "with a justification if max-rescaled)")
+        if self.check_backend and isinstance(func, ast.Attribute):
+            if (func.attr == "default_backend"
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id == "jax"):
+                self._emit("GC203", node,
+                           "jax.default_backend() outside dispatch."
+                           "current_platform (the cached single read)")
+        if self.check_clock and isinstance(func, ast.Attribute):
+            if (func.attr == "monotonic"
+                    and isinstance(func.value, ast.Name)
+                    and func.value.id == "time"
+                    and _CLOCK_GUARD not in self._func_stack):
+                self._emit("GC204", node,
+                           "time.monotonic() outside the _deadline_clock "
+                           "guard in serve/scheduler.py")
+        self.generic_visit(node)
+
+
+def _is_jnp(node: ast.AST) -> bool:
+    """jnp / jax.numpy attribute roots."""
+    if isinstance(node, ast.Name):
+        return node.id == "jnp"
+    return (isinstance(node, ast.Attribute) and node.attr == "numpy"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def run_source(source: str, rel: str) -> List[Finding]:
+    """Run the AST rules over one file's source (``rel`` scopes the rules)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="GC200", file=rel, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}")]
+    v = _Visitor(rel)
+    v.visit(tree)
+    return v.findings
+
+
+def run_ast_rules(files: Iterable[Tuple[pathlib.Path, str]]) -> List[Finding]:
+    """Run AST rules over ``(absolute path, relative posix path)`` pairs."""
+    out: List[Finding] = []
+    for path, rel in files:
+        out.extend(run_source(path.read_text(), rel))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GC205: registry completeness (not a per-file syntactic rule)
+# ---------------------------------------------------------------------------
+def check_registry(
+    ops: Sequence[str],
+    impls: Iterable[Tuple[str, str]],
+    tests_dir: pathlib.Path,
+    *,
+    file: str = "kernels/dispatch.py",
+) -> List[Finding]:
+    """Every op needs an ``xla_reference`` impl and a test that names it.
+
+    Parameterized (ops / impls / tests_dir are injected) so the fixture
+    corpus can trigger the rule against a synthetic registry.
+    """
+    impls = set(impls)
+    findings = []
+    test_texts = None
+    for op in ops:
+        if (op, "xla_reference") not in impls:
+            findings.append(Finding(
+                rule="GC205", file=file, line=1, severity="error",
+                message=f"op {op!r} has no xla_reference implementation "
+                        "(the numerical oracle every backend is tested "
+                        "against)"))
+        if test_texts is None:
+            test_texts = "\n".join(
+                p.read_text() for p in sorted(tests_dir.glob("test_*.py"))
+            ) if tests_dir.is_dir() else ""
+        if op not in test_texts:
+            findings.append(Finding(
+                rule="GC205", file=file, line=1, severity="error",
+                message=f"op {op!r} is referenced by no test under "
+                        f"{tests_dir.name}/"))
+    return findings

@@ -1,0 +1,169 @@
+"""Trace targets for the jaxpr layer.
+
+Repo mode traces two families under representative abstract shapes:
+
+  * every registered ``(op, backend)`` engine implementation from
+    ``kernels/dispatch.py`` (enumerated via ``registered_impls()``), on
+    small GOOM operands — the shapes only need to exercise the code
+    paths, not the performance envelope;
+  * ``DecoderLM.decode_step`` and ``prefill`` for a recurrent (GOOM-RNN)
+    and an attention (OLMo) smoke config — the serving hot path.
+
+File mode (the fixture corpus) loads ``GOOMCHECK_TRACES`` from analyzed
+modules: a list of ``{"name", "fn", "args"}`` dicts where each arg spec
+is ``(domain, shape, dtype)`` (seeding that domain) or a ``Goom`` shape
+via ``("goom", shape)``.  Everything traces with ``ShapeDtypeStruct``
+leaves — no arrays are materialized.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+from typing import Callable, Iterable, List, Optional, Tuple
+
+from .lattice import AbsVal, TokenSource, seed_from_spec, seed_tree
+from .jaxpr_walker import default_relativize, trace_and_walk
+from .report import Finding
+
+__all__ = ["run_repo_targets", "run_module_traces", "TRACED_ARCHS"]
+
+TRACED_ARCHS = ("goom-rnn-124m", "olmo-1b")
+
+
+def _sds(shape, dtype="float32"):
+    import jax
+
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _goom(shape):
+    from repro.core.goom import Goom
+
+    return Goom(_sds(shape), _sds(shape))
+
+
+def _engine_targets():
+    """(name, fn, args) per registered (op, backend) impl."""
+    from repro.kernels import dispatch
+    from repro.kernels.blocks import default_blocks
+
+    shapes = {
+        "lmme": ((8, 8), (8, 8)),
+        "diagonal_scan": ((16, 8), (16, 8)),
+        "matrix_scan": ((16, 4, 4), (16, 4, 4)),
+        "cumulative_lmme": ((16, 4, 4),),
+    }
+    for op, backend in dispatch.registered_impls():
+        if op not in shapes:
+            continue  # third-party op: no canonical abstract shapes
+        impl = dispatch.get_impl(op, backend,
+                                 blocks=default_blocks(op, backend))
+        args = tuple(_goom(s) for s in shapes[op])
+        yield f"{op}/{backend}", impl, args
+
+
+def _model_targets(archs: Iterable[str] = TRACED_ARCHS):
+    import functools
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.model import DecoderLM
+
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        model = DecoderLM(cfg)
+        params, _ = model.init_shapes(jax.random.PRNGKey(0))
+        caches = jax.eval_shape(lambda m=model: m.init_caches(1, 16))
+        token = _sds((1, 1), "int32")
+        index = _sds((), "int32")
+        yield (f"{arch}/decode_step", model.decode_step,
+               (params, token, caches, index))
+        tokens = _sds((1, 8), "int32")
+        fresh = jax.eval_shape(lambda m=model: m.init_caches(1, 16))
+        yield (f"{arch}/prefill",
+               functools.partial(model.prefill, fresh_caches=True),
+               (params, tokens, fresh))
+
+
+def run_repo_targets(
+    *, archs: Iterable[str] = TRACED_ARCHS,
+    relativize: Callable[[str], str] = default_relativize,
+) -> Tuple[List[Finding], List[str]]:
+    """Trace + walk every repo target; unbuildable targets become skips."""
+    findings: List[Finding] = []
+    skips: List[str] = []
+    tokens = TokenSource()
+
+    def targets():
+        yield from _engine_targets()
+        yield from _model_targets(archs)
+
+    for name, fn, args in targets():
+        try:
+            in_vals = seed_tree(args, tokens)
+            findings.extend(trace_and_walk(
+                fn, args, in_vals, target=name,
+                relativize=relativize, tokens=tokens))
+        except Exception as e:  # record, don't abort the whole pass
+            skips.append(f"{name}: {type(e).__name__}: {e}")
+    return findings, skips
+
+
+# ---------------------------------------------------------------------------
+# file mode: GOOMCHECK_TRACES in analyzed modules
+# ---------------------------------------------------------------------------
+def _build_arg(spec, tokens: TokenSource):
+    """-> (abstract arg, seed AbsVals for its leaves)"""
+    kind = spec[0]
+    if kind == "goom":
+        g = _goom(spec[1])
+        return g, seed_tree(g, tokens)
+    domain, shape = spec[0], spec[1]
+    dtype = spec[2] if len(spec) > 2 else "float32"
+    return _sds(shape, dtype), [seed_from_spec(domain, tokens)]
+
+
+def run_module_traces(
+    path: pathlib.Path, rel: str,
+    relativize: Optional[Callable[[str], str]] = None,
+) -> Tuple[List[Finding], List[str]]:
+    """Import ``path``; trace every entry in its ``GOOMCHECK_TRACES``."""
+    findings: List[Finding] = []
+    skips: List[str] = []
+    if "GOOMCHECK_TRACES" not in path.read_text():
+        return findings, skips
+    modname = "goomcheck_fixture_" + rel.replace("/", "_").removesuffix(".py")
+    spec = importlib.util.spec_from_file_location(modname, path)
+    mod = importlib.util.module_from_spec(spec)
+    try:
+        spec.loader.exec_module(mod)
+    except Exception as e:
+        skips.append(f"{rel}: import failed: {type(e).__name__}: {e}")
+        return findings, skips
+
+    if relativize is None:
+        # corpus root = the analyzed path minus its relative suffix
+        root = path.resolve().parents[len(pathlib.PurePosixPath(rel).parts) - 1]
+
+        def relativize(file_name: str) -> str:
+            try:
+                return pathlib.Path(file_name).resolve() \
+                    .relative_to(root).as_posix()
+            except ValueError:
+                return default_relativize(file_name)
+
+    for entry in getattr(mod, "GOOMCHECK_TRACES", []):
+        name = f"{rel}:{entry.get('name', entry['fn'].__name__)}"
+        tokens = TokenSource()
+        try:
+            built = [_build_arg(s, tokens) for s in entry["args"]]
+            args = tuple(a for a, _ in built)
+            in_vals = [v for _, vs in built for v in vs]
+            findings.extend(trace_and_walk(
+                entry["fn"], args, in_vals, target=name,
+                relativize=relativize, tokens=tokens))
+        except Exception as e:
+            skips.append(f"{name}: {type(e).__name__}: {e}")
+    return findings, skips

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import engine
-from .goom import Goom, to_goom
+from .goom import Goom, safe_log, to_goom
 
 __all__ = ["float_chain_survival", "goom_chain", "goom_chain_parallel", "ChainResult"]
 
@@ -50,7 +50,7 @@ def float_chain_survival(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32
     keys = jax.random.split(k1, n_steps)
     (s, alive, steps), _ = jax.lax.scan(step, (s0, jnp.array(True), jnp.array(0)), keys)
     fro = jnp.sqrt(jnp.sum(jnp.square(s.astype(jnp.float32))))
-    return ChainResult(steps, jnp.log(fro))
+    return ChainResult(steps, safe_log(fro))
 
 
 def goom_chain(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32) -> ChainResult:
@@ -73,7 +73,8 @@ def goom_chain(key: jax.Array, d: int, n_steps: int, dtype=jnp.float32) -> Chain
     steps = jnp.where(ok, n_steps, 0).astype(jnp.int32)
     # log Frobenius norm straight from log-space (no overflow possible):
     m = jnp.max(s.log_abs)
-    fro = 0.5 * (jnp.log(jnp.sum(jnp.exp(2.0 * (s.log_abs - m)))) ) + m
+    # the exp is dominated by the subtracted max (2*(x - m) <= 0)
+    fro = 0.5 * safe_log(jnp.sum(jnp.exp(2.0 * (s.log_abs - m)))) + m  # goomcheck: disable=GC202
     return ChainResult(steps, fro)
 
 

@@ -84,6 +84,12 @@ class Goom:
     log_abs: jax.Array
     sign: jax.Array
 
+    #: Value-domain tag per flattened leaf, aligned with ``tree_flatten``
+    #: order.  The static analyzer (``repro.analysis``) reads this to seed
+    #: its jaxpr lattice: ``log_abs`` planes are log-space magnitudes,
+    #: ``sign`` planes are the {+1,-1} channel.
+    _goomcheck_domains = ("log", "sign")
+
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
         return (self.log_abs, self.sign), None

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import engine
-from .goom import Goom, from_goom, to_goom
+from .goom import Goom, from_goom, safe_abs, safe_log, to_goom
 from .ops import goom_lse, goom_normalize_cols
 from .scan import colinearity_select, orthonormal_reset
 
@@ -148,7 +148,7 @@ def spectrum_sequential(jacobians: jax.Array, dt: float) -> jax.Array:
     def step(q, j):
         s = j @ q
         q_new, r = jnp.linalg.qr(s)
-        return q_new, jnp.log(jnp.abs(jnp.diagonal(r)))
+        return q_new, safe_log(safe_abs(jnp.diagonal(r)))
 
     _, logs = jax.lax.scan(step, q0, jacobians)
     return jnp.mean(logs, axis=0) / dt
@@ -162,7 +162,7 @@ def lle_sequential(jacobians: jax.Array, dt: float) -> jax.Array:
     def step(u, j):
         s = j @ u
         n = jnp.linalg.norm(s)
-        return s / n, jnp.log(n)
+        return s / n, safe_log(n)
 
     _, logs = jax.lax.scan(step, u0, jacobians)
     return jnp.mean(logs) / dt
@@ -217,7 +217,7 @@ def spectrum_parallel(
         s_out = jnp.einsum("tij,tjk->tik", jacobians, q)
         # (d) QR every output state; mean of log|diag R|.
         _, r = jnp.linalg.qr(s_out)
-        logs = jnp.log(jnp.abs(jnp.diagonal(r, axis1=-2, axis2=-1)))
+        logs = safe_log(safe_abs(jnp.diagonal(r, axis1=-2, axis2=-1)))
         return jnp.mean(logs, axis=0) / dt
 
     # Pad the trailing partial chunk with identity Jacobians: the identity
@@ -240,7 +240,7 @@ def spectrum_parallel(
         q_prev = jnp.concatenate([q_in[None], q[:-1]], axis=0)
         s_out = jnp.einsum("tij,tjk->tik", js_k, q_prev)
         _, r = jnp.linalg.qr(s_out)
-        logs = jnp.log(jnp.abs(jnp.diagonal(r, axis1=-2, axis2=-1)))
+        logs = safe_log(safe_abs(jnp.diagonal(r, axis1=-2, axis2=-1)))
         return q[-1], logs
 
     _, logs = jax.lax.scan(chunk_step, jnp.eye(d, dtype=jacobians.dtype), js_c)

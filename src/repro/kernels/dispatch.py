@@ -56,7 +56,7 @@ from .lmme import lmme_pallas
 
 __all__ = ["BACKENDS", "CONCRETE_BACKENDS", "OPS", "current_platform",
            "resolve_backend", "register_impl", "register_backend",
-           "registered_backends", "get_impl"]
+           "registered_backends", "registered_impls", "get_impl"]
 
 CONCRETE_BACKENDS = ["xla_reference", "pallas_tpu", "pallas_interpret",
                      "pallas_gpu", "pallas_gpu_interpret"]
@@ -137,6 +137,15 @@ def register_backend(name: str, impls: Dict[str, _Factory]) -> None:
 def registered_backends(op: str) -> Tuple[str, ...]:
     """The backends with a registered implementation of ``op``."""
     return tuple(b for (o, b) in _REGISTRY if o == op)
+
+
+def registered_impls() -> Tuple[Tuple[str, str], ...]:
+    """Every registered ``(op, backend)`` pair, sorted.
+
+    This is the enumeration the static analyzer (``repro.analysis``)
+    walks: each pair is traced under abstract shapes and its jaxpr
+    checked against the GOOM numerical-safety rules."""
+    return tuple(sorted(_REGISTRY))
 
 
 def _pallas_flags(resolved: str) -> Tuple[str, bool]:

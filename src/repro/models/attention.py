@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.goom import safe_log
 from ..sharding import constrain
 from .common import KeyGen, Param, dense_init, dense_apply, scaled_normal
 from .norms import rmsnorm_init, rmsnorm_apply
@@ -173,7 +174,7 @@ def banded_attention(
     scores = jnp.where(mask[None, :, :, None, None, :], scores, -jnp.inf)
     m = jnp.max(scores, axis=-1, keepdims=True)
     m = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.exp(scores - m)
+    p = jnp.exp(scores - m)  # goomcheck: disable=GC202 — max-rescaled softmax
     l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = jnp.einsum("bnqhgk,bnkhd->bnqhgd", (p / l).astype(v_pair.dtype),
                      v_pair, preferred_element_type=jnp.float32)
@@ -220,8 +221,8 @@ def _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, block_q, block_kv):
         m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
         # guards: fully-masked-so-far rows keep p == 0, never NaN
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
-        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
-        p = jnp.exp(s - m_safe[..., None])
+        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)  # goomcheck: disable=GC202 — online-softmax rescale
+        p = jnp.exp(s - m_safe[..., None])  # goomcheck: disable=GC202 — max-rescaled softmax
         l_new = l_run * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
@@ -233,7 +234,7 @@ def _flash_fwd_impl(q, k, v, qpos, kpos, window, scale, block_q, block_kv):
     out = (acc / l_safe[..., None]).reshape(b, sq, h, d)
     # +1e30 sentinel for empty rows keeps backward p = exp(-inf-1e30) = 0
     lse = jnp.where(l_f > 0, jnp.where(jnp.isfinite(m_f), m_f, 0.0)
-                    + jnp.log(l_safe), 1e30)
+                    + safe_log(l_safe), 1e30)
     return out, lse
 
 
@@ -265,7 +266,7 @@ def _flash_bwd(window, scale, block_q, block_kv, res, dout):
                        preferred_element_type=jnp.float32) * scale
         mask = _mask_block(qpos, kp, win)
         s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
-        p = jnp.exp(s - lse[..., None])              # exact probabilities
+        p = jnp.exp(s - lse[..., None])  # exact probabilities; goomcheck: disable=GC202 — lse-rescaled
         dv_blk = jnp.einsum("bqhgk,bqhgd->bkhd", p, dout)
         dp = jnp.einsum("bqhgd,bkhd->bqhgk", dout, v_blk)
         ds = p * (dp - delta[..., None]) * scale
@@ -544,7 +545,7 @@ def _decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
                    preferred_element_type=jnp.float32) * scale
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p_ = jnp.exp(s - m)
+    p_ = jnp.exp(s - m)  # goomcheck: disable=GC202 — max-rescaled softmax
     l = jnp.sum(p_, axis=-1, keepdims=True)
     # normalize after the f32 accumulation (same rounding order as the
     # flash prefill path: p is cast to the value dtype, the division
@@ -593,7 +594,7 @@ def _paged_decode_attention(q, k_new, v_new, cache, cfg: AttentionCfg, scale):
                    preferred_element_type=jnp.float32) * scale
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p_ = jnp.exp(s - m)
+    p_ = jnp.exp(s - m)  # goomcheck: disable=GC202 — max-rescaled softmax
     l = jnp.sum(p_, axis=-1, keepdims=True)
     acc = jnp.einsum("bqhgk,bkhd->bqhgd", p_.astype(vg.dtype), vg,
                      preferred_element_type=jnp.float32)

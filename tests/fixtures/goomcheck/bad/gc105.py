@@ -1,0 +1,17 @@
+"""GC105 reproducer: an impure callback primitive in a traced hot path.
+
+jax.debug.print lowers to debug_callback — a host round-trip per
+dispatch, which serializes the serving step loop.
+"""
+
+import jax
+
+
+def chatty(x):
+    jax.debug.print("x = {}", x)
+    return x + 1.0
+
+
+GOOMCHECK_TRACES = [
+    {"name": "chatty", "fn": chatty, "args": [("linear", (8,), "float32")]},
+]

@@ -1,0 +1,10 @@
+"""GC201 reproducer: block/tile plumbing named outside kernels/.
+
+Both a BlockConfig(...) literal and a `matmul=` keyword are rejected —
+callers are supposed to go through engine.use_blocks / the autotune cache.
+"""
+
+
+def run(engine, goom_ops, x):
+    cfg = goom_ops.BlockConfig(block_t=128)
+    return engine.lmme(x, x, matmul=cfg)

@@ -1,0 +1,7 @@
+"""GC202 reproducer: raw jnp.exp outside core/goom.py and kernels/."""
+
+import jax.numpy as jnp
+
+
+def blow_up(x):
+    return jnp.exp(x)

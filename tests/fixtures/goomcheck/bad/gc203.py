@@ -1,0 +1,7 @@
+"""GC203 reproducer: jax.default_backend() outside the cached dispatch read."""
+
+import jax
+
+
+def platform():
+    return jax.default_backend()

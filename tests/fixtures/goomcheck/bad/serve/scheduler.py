@@ -1,0 +1,12 @@
+"""GC204 reproducer: a clock read outside the _deadline_clock guard.
+
+The rule only applies to files ending serve/scheduler.py — which is why
+this fixture lives at bad/serve/scheduler.py.
+"""
+
+import time
+
+
+def sweep(active):
+    now = time.monotonic()
+    return [r for r in active if r.deadline > now]

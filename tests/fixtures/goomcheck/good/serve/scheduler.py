@@ -1,0 +1,12 @@
+"""Known-good scheduler: the clock is read only inside _deadline_clock."""
+
+import time
+
+
+def _deadline_clock():
+    return time.monotonic()
+
+
+def sweep(active):
+    now = _deadline_clock()
+    return [r for r in active if r.deadline > now]

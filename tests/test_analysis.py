@@ -1,0 +1,164 @@
+"""goomcheck (src/repro/analysis): fixture corpora, suppression semantics,
+CLI exit codes, and the live-repo meta-test that CI gates on.
+
+The bad corpus under tests/fixtures/goomcheck/bad has one minimal
+reproducer per rule; expected line numbers are located by searching the
+fixture source for the triggering expression, so editing a fixture
+docstring cannot silently break the assertions.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (RULES, analyze_paths, analyze_repo,
+                            check_registry, format_text, repo_root)
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "goomcheck"
+BAD = FIXTURES / "bad"
+GOOD = FIXTURES / "good"
+
+
+@pytest.fixture(scope="module")
+def bad_result():
+    return analyze_paths([BAD])
+
+
+def _line(rel: str, needle: str) -> int:
+    """1-indexed line of the first fixture line containing ``needle``."""
+    for i, text in enumerate((BAD / rel).read_text().splitlines(), start=1):
+        if needle in text:
+            return i
+    raise AssertionError(f"{rel}: no line contains {needle!r}")
+
+
+# one (rule, fixture, triggering expression) triple per reproducer
+CASES = [
+    ("GC101", "gc101.py", "jnp.exp(x)"),
+    ("GC102", "gc102.py", "astype"),
+    ("GC103", "gc103.py", "jnp.log(x)"),
+    ("GC104", "gc104.py", "jnp.sum(p)"),
+    ("GC105", "gc105.py", 'jax.debug.print("x'),
+    ("GC201", "gc201.py", "goom_ops.BlockConfig("),
+    ("GC201", "gc201.py", "matmul=cfg"),
+    ("GC202", "gc202.py", "jnp.exp(x)"),
+    ("GC203", "gc203.py", "return jax.default_backend()"),
+    ("GC204", "serve/scheduler.py", "time.monotonic()"),
+]
+
+
+@pytest.mark.parametrize("rule,rel,needle", CASES,
+                         ids=[f"{r}-{n}" for r, _, n in CASES])
+def test_bad_fixture_triggers_rule(bad_result, rule, rel, needle):
+    active = {f.key() for f in bad_result.findings if not f.suppressed}
+    assert (rule, rel, _line(rel, needle)) in active, \
+        format_text(bad_result, verbose=True)
+
+
+def test_bad_corpus_has_no_skips_and_fails_ci(bad_result):
+    assert bad_result.skips == []
+    assert not bad_result.ok
+
+
+def test_gc205_registry_completeness():
+    tests_dir = repo_root() / "tests"
+    # built by concatenation so this file's own text can't satisfy the
+    # "some test names the op" check
+    phantom = "zz_" + "phantom_op"
+    findings = check_registry(
+        ["lmme", phantom], [("lmme", "xla_reference")], tests_dir)
+    assert [f.rule for f in findings] == ["GC205", "GC205"]
+    assert all(phantom in f.message for f in findings)
+
+    # the real registry is complete (the repo-mode half of the rule)
+    from repro.kernels import dispatch
+    from repro.kernels.blocks import OPS
+
+    assert check_registry(OPS, dispatch.registered_impls(), tests_dir) == []
+
+
+def test_every_rule_has_a_triggering_fixture(bad_result):
+    triggered = {f.rule for f in bad_result.findings}
+    triggered |= {f.rule for f in check_registry(
+        ["zz_" + "phantom_op"], [], repo_root() / "tests")}
+    assert triggered >= set(RULES), sorted(set(RULES) - triggered)
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+# ---------------------------------------------------------------------------
+def test_suppression_is_line_and_rule_scoped(bad_result):
+    # gc104.py suppresses exactly the GC101 at its exp site; the GC202 on
+    # the same line and the GC104 on the next line stay active
+    sup = [(f.rule, f.file) for f in bad_result.findings if f.suppressed]
+    assert sup == [("GC101", "gc104.py")]
+
+
+def test_suppression_comment_must_name_the_rule(tmp_path):
+    src = ("import jax.numpy as jnp\n"
+           "\n"
+           "# goomcheck: disable=GC203\n"
+           "x = jnp.exp(1.0)\n")
+    f = tmp_path / "m.py"
+    f.write_text(src)
+    res = analyze_paths([f], trace=False)
+    assert [(x.rule, x.suppressed) for x in res.findings] == [("GC202", False)]
+
+    # naming the right rule on the line above suppresses it
+    f.write_text(src.replace("GC203", "GC202"))
+    res = analyze_paths([f], trace=False)
+    assert [(x.rule, x.suppressed) for x in res.findings] == [("GC202", True)]
+
+    # disable=all works too
+    f.write_text(src.replace("disable=GC203", "disable=all"))
+    res = analyze_paths([f], trace=False)
+    assert res.ok and res.findings[0].suppressed
+
+
+def test_good_corpus_is_clean():
+    res = analyze_paths([GOOD])
+    assert res.skips == []
+    assert res.ok, format_text(res, verbose=True)
+    # the corpus' one exp site is justified-and-suppressed, not absent —
+    # locking in that suppressed findings do not gate
+    assert [(f.rule, f.suppressed) for f in res.findings] == [("GC202", True)]
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (the acceptance criterion CI relies on)
+# ---------------------------------------------------------------------------
+def _run_cli(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo_root() / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=repo_root())
+
+
+def test_cli_bad_corpus_exits_nonzero(tmp_path):
+    out = tmp_path / "findings.json"
+    r = _run_cli(str(BAD), "--ci", "--json", str(out))
+    assert r.returncode != 0, r.stdout + r.stderr
+    data = json.loads(out.read_text())
+    assert data["ok"] is False and data["findings"]
+
+
+def test_cli_good_corpus_exits_zero():
+    r = _run_cli(str(GOOD), "--ci")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# the live repo is goomcheck-clean (what `python -m repro.analysis --ci`
+# gates in CI; kept as an in-suite meta-test so a regressing PR fails
+# pytest even before the dedicated CI job runs)
+# ---------------------------------------------------------------------------
+def test_live_repo_is_goomcheck_clean():
+    res = analyze_repo()
+    assert res.skips == [], res.skips
+    assert res.ok, format_text(res)

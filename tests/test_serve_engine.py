@@ -458,33 +458,22 @@ def test_step_loop_dispatch_only_without_deadlines(monkeypatch):
     assert len(eng.result(0)) == 6 and len(eng.result(1)) == 6
 
 
-def test_deadlined_request_reads_clock_only_while_live(monkeypatch):
-    """With one deadlined request the clock is read once per step while
-    it is live — and not at all after it terminates."""
-    from repro.serve import scheduler
+def test_scheduler_clock_reads_are_goomcheck_guarded():
+    """The deadline-clock invariant as a goomcheck rule (GC204): every
+    ``time.monotonic()`` in the real scheduler sits inside the
+    ``_deadline_clock`` guard, so clock cost scales with live deadlines
+    only.  The zero-deadline runtime smoke above stays; the
+    count-reads-per-step variant this test used to be is now the static
+    rule."""
+    from repro.analysis import repo_root, run_source
 
-    cfg, model, params = _model("olmo-1b")
-    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4)
-    calls = {"n": 0}
-    real_time = scheduler.time
-
-    class _Counting:
-        @staticmethod
-        def monotonic():
-            calls["n"] += 1
-            return real_time.monotonic()
-
-    monkeypatch.setattr(scheduler, "time", _Counting)
-    eng.submit(Request(uid="d", prompt=[1, 2], max_new_tokens=3,
-                       deadline_ms=60_000.0))
-    while eng.has_work:
-        eng.step()
-    assert eng.finish_reason("d") == "length"
-    after_finish = calls["n"]
-    eng.submit(Request(uid="p", prompt=[3, 4], max_new_tokens=3))
-    while eng.has_work:
-        eng.step()
-    assert calls["n"] == after_finish, "clock read with no live deadline"
+    sched = repo_root() / "src" / "repro" / "serve" / "scheduler.py"
+    hits = [f for f in run_source(sched.read_text(), "serve/scheduler.py")
+            if f.rule == "GC204"]
+    assert hits == [], [str(h) for h in hits]
+    # and the rule actually bites on a regression:
+    bad = "import time\n\ndef step():\n    return time.monotonic()\n"
+    assert [f.rule for f in run_source(bad, "serve/scheduler.py")] == ["GC204"]
 
 
 # ---------------------------------------------------------------------------

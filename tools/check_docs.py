@@ -18,7 +18,8 @@ import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-REQUIRED = ["docs/DESIGN.md", "docs/engine.md", "docs/serving.md"]
+REQUIRED = ["docs/DESIGN.md", "docs/engine.md", "docs/serving.md",
+            "docs/analysis.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 DOCREF_RE = re.compile(r"docs/[\w.-]+\.md")
 

@@ -32,6 +32,15 @@
                     aggregate tok/s, ttft and request-latency percentiles
                     from /status, rejection counts (``--preset smoke``
                     for CI shapes).
+  serve_prefix    — cross-request prefix reuse A/B: shared-system-prompt
+                    TTFT and dispatched prefill tokens, reuse on vs off
+                    (writes the ``serve_prefix`` section of
+                    results/BENCH_serve.json).
+  serve_decode    — fused multi-step decode A/B: horizon 1 vs adaptive 8,
+                    streaming off/on — tokens/s, tokens-per-dispatch,
+                    host-syncs-per-token, with bit-identical outputs
+                    across cells (writes the ``serve_decode`` section of
+                    results/BENCH_serve.json).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [names...] [--backend B ...]
        [--preset {full,smoke}] [--emit-bench]
@@ -635,6 +644,156 @@ def serve_api(preset: str = "full", backend: str = "auto"):
     return res
 
 
+def _update_bench_serve(section: str, payload: dict) -> str:
+    """Merge one benchmark's rows into ``results/BENCH_serve.json``
+    (bench_serve/v2: one file, one section per serve benchmark, so
+    ``serve_prefix`` and ``serve_decode`` don't clobber each other).  A
+    v1 file (bare serve_prefix payload at top level) is discarded."""
+    path = os.path.join(RESULTS_DIR, "BENCH_serve.json")
+    doc = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+    if doc.get("schema") != "bench_serve/v2":
+        doc = {}
+    doc.update({
+        "schema": "bench_serve/v2",
+        "device_kind": jax.devices()[0].device_kind,
+        "platform": jax.default_backend(),
+    })
+    doc[section] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def serve_decode(preset: str = "full", backend: str = "auto"):
+    """Fused multi-step decode A/B: horizon 1 vs adaptive, stream off/on.
+
+    The decode-heavy continuous-batching shape multi-step decode exists
+    for (short prompts, long generations, every slot busy): the same
+    workload through four engines — ``eos_scan_every=1`` (one dispatch
+    and one host sync per token, the pre-fusion engine) vs ``8``
+    (adaptive fused horizons + double-buffered token flight), each with
+    streaming callbacks off and on.  Outputs must be bit-identical
+    across all four cells.  Deterministic acceptance: the fused
+    non-streaming cell dispatches >=4 tokens per device round-trip and
+    materializes <=1/8 host syncs per token; wall-clock tokens/s is
+    reported (and the h8/h1 speedup printed) but only gated on not
+    *regressing* below 1x so CI stays robust to noisy runners.  Writes
+    the ``serve_decode`` section of results/BENCH_serve.json
+    (bench_serve/v2).
+    """
+    from repro.configs import get_config
+    from repro.models.common import unzip
+    from repro.models.model import DecoderLM
+    from repro.serve import Engine, Request
+
+    smoke = preset == "smoke"
+    arch = "goom-rnn-124m"
+    cfg = get_config(arch, smoke=True)
+    model = DecoderLM(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+
+    if smoke:
+        n_req, p_len, gen, max_slots, chunk = 4, 4, 48, 4, 4
+    else:
+        n_req, p_len, gen, max_slots, chunk = 8, 8, 128, 4, 4
+    page_len = p_len + gen + 8
+    prompts = [list(map(int, jax.random.randint(
+        jax.random.PRNGKey(20 + i), (p_len,), 0, cfg.vocab)))
+        for i in range(n_req)]
+    print(f"# serve_decode[{preset}]: {arch}(smoke), {n_req} requests x "
+          f"{gen} tokens through {max_slots} slots, chunk {chunk}")
+
+    def run_cell(horizon, stream):
+        events = []
+        eng = Engine(model, params, max_slots=max_slots, page_len=page_len,
+                     chunk=chunk, backend=backend, eos_scan_every=horizon,
+                     stream_callback=(
+                         (lambda uid, toks, reason:
+                          events.append((uid, list(toks)))) if stream
+                         else None))
+        # warm pass: max_slots+1 short requests compile prefill plus both
+        # decode horizons (k=1 runs while the extra request queues)
+        eng.run([Request(uid=f"w{j}", prompt=prompts[0], max_new_tokens=8,
+                         stream=stream) for j in range(max_slots + 1)])
+        events.clear()
+        pre = eng.decode_stats()  # counters are cumulative: delta the warm
+        t0 = time.perf_counter()
+        for i in range(n_req):
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=gen, stream=stream))
+        while eng.has_work:
+            eng.step()
+        wall = time.perf_counter() - t0
+        outs = {i: eng.pop_result(i) for i in range(n_req)}
+        if stream:  # the event stream must reassemble the exact outputs
+            per = {i: [] for i in range(n_req)}
+            for uid, toks in events:
+                per[uid].extend(toks)
+            assert per == outs
+        post = eng.decode_stats()
+        dispatches = post["dispatches"] - pre["dispatches"]
+        steps = post["decode_steps"] - pre["decode_steps"]
+        syncs = post["host_syncs"] - pre["host_syncs"]
+        n_tok = sum(len(v) for v in outs.values())
+        return {
+            "horizon": horizon,
+            "streaming": stream,
+            "wall_s": wall,
+            "tokens_total": n_tok,
+            "tokens_per_s": n_tok / wall,
+            "dispatches": dispatches,
+            "tokens_per_dispatch": steps / max(dispatches, 1),
+            "host_syncs": syncs,
+            "syncs_per_token": syncs / max(steps, 1),
+        }, outs
+
+    cells = {}
+    ref_outs = None
+    for horizon in (1, 8):
+        for stream in (False, True):
+            key = f"h{horizon}_{'stream' if stream else 'batch'}"
+            cells[key], outs = run_cell(horizon, stream)
+            if ref_outs is None:
+                ref_outs = outs
+            else:
+                assert outs == ref_outs  # fusion must not change a token
+    speedup = (cells["h8_batch"]["tokens_per_s"]
+               / cells["h1_batch"]["tokens_per_s"])
+    stream_speedup = (cells["h8_stream"]["tokens_per_s"]
+                      / cells["h1_stream"]["tokens_per_s"])
+    # deterministic acceptance: the fused engine really batches the work
+    assert cells["h8_batch"]["tokens_per_dispatch"] >= 4.0, cells["h8_batch"]
+    assert cells["h8_batch"]["syncs_per_token"] <= 1.0 / 8, cells["h8_batch"]
+    assert cells["h8_stream"]["host_syncs"] < cells["h1_stream"]["host_syncs"]
+    assert speedup >= 1.0, f"fused decode slower than single-step: {speedup}"
+
+    res = {
+        "preset": preset,
+        "workload": {"arch": arch, "requests": n_req, "prompt": p_len,
+                     "gen": gen, "max_slots": max_slots, "chunk": chunk,
+                     "page_len": page_len},
+        "cells": cells,
+        "decode_speedup": speedup,
+        "stream_speedup": stream_speedup,
+    }
+    path = _update_bench_serve("serve_decode", res)
+    print("cell,tokens_per_s,tokens_per_dispatch,syncs_per_token")
+    for key, row in cells.items():
+        print(f"{key},{row['tokens_per_s']:.1f},"
+              f"{row['tokens_per_dispatch']:.2f},"
+              f"{row['syncs_per_token']:.4f}")
+    print(f"decode speedup (h8/h1): {speedup:.2f}x non-streaming, "
+          f"{stream_speedup:.2f}x streaming")
+    print(f"wrote {path}")
+    return res
+
+
 def serve_prefix(preset: str = "full", backend: str = "auto"):
     """Cross-request prefix reuse: shared-system-prompt TTFT, on vs off.
 
@@ -646,7 +805,8 @@ def serve_prefix(preset: str = "full", backend: str = "auto"):
     admission re-prefills from token 0).  Prefill work is also counted in
     *dispatched tokens* via the prefill's call counters — a deterministic
     proxy for prefill FLOPs that CI can assert on while wall-clock stays
-    informational.  Writes ``results/BENCH_serve.json`` (bench_serve/v1).
+    informational.  Writes the ``serve_prefix`` section of
+    ``results/BENCH_serve.json`` (bench_serve/v2).
     """
     from repro.configs import get_config
     from repro.models.common import unzip
@@ -725,9 +885,6 @@ def serve_prefix(preset: str = "full", backend: str = "auto"):
     assert on["prefill_tokens_dispatched"] < off["prefill_tokens_dispatched"]
 
     res = {
-        "schema": "bench_serve/v1",
-        "device_kind": jax.devices()[0].device_kind,
-        "platform": jax.default_backend(),
         "preset": preset,
         "workload": {"arch": arch, "clients": n_clients,
                      "shared_prefix": k_shared, "suffix": sfx, "gen": gen,
@@ -739,9 +896,7 @@ def serve_prefix(preset: str = "full", backend: str = "auto"):
         "dispatch_reduction": (off["prefill_tokens_dispatched"]
                                / on["prefill_tokens_dispatched"]),
     }
-    path = os.path.join(RESULTS_DIR, "BENCH_serve.json")
-    with open(path, "w") as f:
-        json.dump(res, f, indent=1)
+    path = _update_bench_serve("serve_prefix", res)
     print("mode,ttft_p50_ms,ttft_p99_ms,prefill_tokens,hit_rate")
     for mode, row in (("reuse_on", on), ("reuse_off", off)):
         print(f"{mode},{row['ttft_ms']['p50']:.1f},"
@@ -767,6 +922,7 @@ ALL = {
     "serve_throughput": serve_throughput,
     "serve_api": serve_api,
     "serve_prefix": serve_prefix,
+    "serve_decode": serve_decode,
 }
 
 
@@ -810,7 +966,7 @@ def main() -> None:
                 tuple(args.backend
                       or ("reference", "pallas", "pallas_gpu_interpret")),
                 emit_bench=args.emit_bench, preset=args.preset)
-        elif name in ("serve_throughput", "serve_api", "serve_prefix"):
+        elif name.startswith("serve_"):
             results[name] = ALL[name](
                 args.preset, (args.backend or ["auto"])[0])
         else:

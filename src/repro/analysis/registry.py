@@ -74,6 +74,13 @@ _CATALOG = [
          "an engine op is missing its xla_reference registration or has no "
          "test referencing it: every op in kernels/dispatch.py needs a "
          "reference impl (the numerical oracle) and test coverage."),
+    Rule("GC206", "ast", "error", "host-sync-outside-flight",
+         "a blocking device->host pull (jax.device_get, single-argument "
+         "np.asarray, or int()/float() of either) in serve/scheduler.py or "
+         "serve/steps.py outside the _TokenFlight transfer buffer: the "
+         "decode loop is dispatch-only, and every materialization routes "
+         "through the async double-buffered lane so streaming never blocks "
+         "a dispatch."),
 ]
 
 RULES: Dict[str, Rule] = {r.id: r for r in _CATALOG}

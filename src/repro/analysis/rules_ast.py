@@ -1,4 +1,4 @@
-"""AST layer: architectural lint rules (GC201-GC205).
+"""AST layer: architectural lint rules (GC201-GC206).
 
 Rules are scoped by *relative path* (posix), so the same visitor serves
 both repo mode (paths relative to ``src/repro``) and fixture-corpus mode
@@ -33,6 +33,10 @@ _BACKEND_ALLOWED = ("kernels/dispatch.py",)
 # GC204: only applies to the scheduler; only this function may read the clock
 _SCHEDULER_SUFFIX = "serve/scheduler.py"
 _CLOCK_GUARD = "_deadline_clock"
+# GC206: host pulls in the serve hot loop may only live in the transfer
+# buffer (async double-buffered device→host lane)
+_HOTLOOP_SUFFIXES = ("serve/scheduler.py", "serve/steps.py")
+_SYNC_GUARD_CLASS = "_TokenFlight"
 
 
 def _in_kernels(rel: str) -> bool:
@@ -44,23 +48,31 @@ class _Visitor(ast.NodeVisitor):
         self.rel = rel
         self.findings: List[Finding] = []
         self._func_stack: List[str] = []
+        self._class_stack: List[str] = []
         self.check_blocks = not (_in_kernels(rel) or rel in _BLOCK_ALLOWED)
         self.check_logexp = not (_in_kernels(rel) or rel in _LOGEXP_ALLOWED)
         self.check_backend = rel not in _BACKEND_ALLOWED
         self.check_clock = rel.endswith(_SCHEDULER_SUFFIX)
+        self.check_sync = rel.endswith(_HOTLOOP_SUFFIXES)
+        self._sync_reported: set = set()  # inner pulls covered by a wrapper
 
     def _emit(self, rule: str, node: ast.AST, message: str):
         self.findings.append(Finding(
             rule=rule, file=self.rel, line=getattr(node, "lineno", 0),
             message=message, severity=RULES[rule].severity))
 
-    # -- function context (for the GC204 guard) ------------------------------
+    # -- function/class context (for the GC204 / GC206 guards) ---------------
     def visit_FunctionDef(self, node):
         self._func_stack.append(node.name)
         self.generic_visit(node)
         self._func_stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
 
     # -- calls ---------------------------------------------------------------
     def visit_Call(self, node: ast.Call):
@@ -99,6 +111,25 @@ class _Visitor(ast.NodeVisitor):
                 self._emit("GC204", node,
                            "time.monotonic() outside the _deadline_clock "
                            "guard in serve/scheduler.py")
+        if self.check_sync and _SYNC_GUARD_CLASS not in self._class_stack:
+            # int(np.asarray(x)) / float(jax.device_get(x)): one finding at
+            # the wrapper, and the inner pull is marked as already reported
+            if (isinstance(func, ast.Name) and func.id in ("int", "float")
+                    and len(node.args) == 1
+                    and _is_device_pull(node.args[0])):
+                self._sync_reported.add(id(node.args[0]))
+                self._emit("GC206", node,
+                           f"{func.id}(...) host-syncs a device value in "
+                           "the serve hot loop — route materialization "
+                           "through the _TokenFlight transfer buffer")
+            elif _is_device_pull(node) and id(node) not in self._sync_reported:
+                what = ("jax.device_get" if node.func.attr == "device_get"
+                        else "bare np.asarray")
+                self._emit("GC206", node,
+                           f"{what}(...) host-syncs a device value in the "
+                           "serve hot loop — route materialization through "
+                           "the _TokenFlight transfer buffer (host-side "
+                           "data prep passes an explicit dtype)")
         self.generic_visit(node)
 
 
@@ -108,6 +139,27 @@ def _is_jnp(node: ast.AST) -> bool:
         return node.id == "jnp"
     return (isinstance(node, ast.Attribute) and node.attr == "numpy"
             and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def _is_np(node: ast.AST) -> bool:
+    """np / numpy roots (host numpy, not jnp)."""
+    return isinstance(node, ast.Name) and node.id in ("np", "numpy")
+
+
+def _is_device_pull(node: ast.AST) -> bool:
+    """A call that blocks on device→host transfer: ``jax.device_get(x)``
+    or single-argument ``np.asarray(x)`` (the device-pull signature —
+    host-side data prep always passes an explicit dtype)."""
+    if not isinstance(node, ast.Call):
+        return False
+    func = node.func
+    if not isinstance(func, ast.Attribute):
+        return False
+    if (func.attr == "device_get" and isinstance(func.value, ast.Name)
+            and func.value.id == "jax"):
+        return True
+    return (func.attr == "asarray" and _is_np(func.value)
+            and len(node.args) == 1 and not node.keywords)
 
 
 def run_source(source: str, rel: str) -> List[Finding]:

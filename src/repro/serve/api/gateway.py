@@ -114,9 +114,10 @@ class Gateway:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         engine.stream_callback = self._on_stream
-        # seed the prefix-cache gauges so /status has them before the
-        # first step (and when prefix reuse is disabled)
+        # seed the prefix-cache and decode gauges so /status has them
+        # before the first step (and when prefix reuse is disabled)
         self.metrics.record_prefix_stats(engine.prefix_stats())
+        self.metrics.record_decode_stats(engine.decode_stats())
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Gateway":
@@ -179,12 +180,18 @@ class Gateway:
             if not eng.has_work:
                 continue
             try:
+                # one step() is one fused decode dispatch (an adaptive
+                # horizon of up to eos_scan_every tokens): commands were
+                # drained above, so a submit that arrives now waits at
+                # most one horizon before the engine sees its queue
+                # non-empty and drops back to k=1 dispatches
                 t0 = time.perf_counter()
                 eng.step()
                 self.metrics.record_step(time.perf_counter() - t0,
                                          eng.n_active)
                 # engine-thread-only counters, synced as gauges for /status
                 self.metrics.record_prefix_stats(eng.prefix_stats())
+                self.metrics.record_decode_stats(eng.decode_stats())
             except Exception:
                 traceback.print_exc()
                 self._fail_all("error")

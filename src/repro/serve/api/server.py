@@ -158,6 +158,7 @@ class ServeAPI:
         # synced after each step, which can lag the terminal stream event
         # a fast client reacts to (pure-python counters; GIL-safe)
         snap["prefix_cache"] = eng.prefix_stats()
+        snap["decode"] = eng.decode_stats()
         snap["engine"] = {
             "max_slots": eng.max_slots,
             "n_active": eng.n_active,

@@ -49,7 +49,10 @@ class ServeMetrics:
       ``finish_reason`` (length/stop/timeout/cancelled);
     * ``record_prefix_stats(stats)`` — gauge sync of the engine's
       prefix-cache counters (``Engine.prefix_stats()``): hit rate,
-      prefill tokens saved, page-pool occupancy.
+      prefill tokens saved, page-pool occupancy;
+    * ``record_decode_stats(stats)`` — gauge sync of the engine's
+      multi-step decode counters (``Engine.decode_stats()``): dispatches,
+      tokens-per-dispatch, host syncs per token.
     """
 
     def __init__(self, window: int = 2048):
@@ -65,6 +68,7 @@ class ServeMetrics:
         self._request_s: deque = deque(maxlen=window)
         self._busy_slots = 0  # n_active at the last recorded step
         self._prefix: Optional[dict] = None  # last prefix-cache gauge sync
+        self._decode: Optional[dict] = None  # last decode-counters gauge sync
 
     # -- recording (any thread) --------------------------------------------
     def record_submitted(self) -> None:
@@ -103,6 +107,13 @@ class ServeMetrics:
         with self._lock:
             self._prefix = dict(stats)
 
+    def record_decode_stats(self, stats: dict) -> None:
+        """Sync the engine's multi-step decode counters
+        (``Engine.decode_stats()``; gauge overwrite, same pattern as
+        :meth:`record_prefix_stats`)."""
+        with self._lock:
+            self._decode = dict(stats)
+
     # -- reading -------------------------------------------------------------
     def snapshot(self) -> dict:
         """One consistent stats dict (the ``/status`` payload core)."""
@@ -114,6 +125,11 @@ class ServeMetrics:
                 "hit_tokens": 0, "prefill_tokens_saved": 0, "nodes": 0,
                 "evicted": 0, "page_size": 0,
                 "pages": {"total": 0, "used": 0, "free": 0, "occupancy": 0.0},
+            }
+            decode = dict(self._decode) if self._decode is not None else {
+                "dispatches": 0, "decode_steps": 0,
+                "tokens_per_dispatch": 0.0, "host_syncs": 0,
+                "syncs_per_token": 0.0, "horizon_max": 0, "last_horizon": 0,
             }
             return {
                 "uptime_s": uptime,
@@ -138,4 +154,5 @@ class ServeMetrics:
                 },
                 "busy_slots": self._busy_slots,
                 "prefix_cache": prefix,
+                "decode": decode,
             }

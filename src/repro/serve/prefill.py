@@ -99,7 +99,8 @@ class ChunkedPrefill:
         """
         # slice on the host (numpy): each jitted call gets one small
         # transfer instead of per-chunk device slice/arange dispatches
-        prompt = np.asarray(jax.device_get(prompt), np.int32).reshape(-1)
+        # (np.asarray already pulls device arrays to host — no device_get)
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
         p = int(prompt.shape[0])
         if p == 0:
             raise ValueError("empty prompt: need at least one token")

@@ -259,6 +259,81 @@ def clear_slot_pages(slot_caches, slot) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# on-device termination state (multi-step decode)
+# ---------------------------------------------------------------------------
+def init_term_state(max_slots: int) -> dict:
+    """Per-slot termination state carried on device by ``decode_multi``.
+
+    * ``active``    — bool, slot still producing tokens.  Everything else
+      about a frozen slot (tokens, pos, caches) stops advancing in-device.
+    * ``eos``       — the slot's stop token, or ``-1`` (no token id is
+      negative, so requests without an EOS never match).
+    * ``remaining`` — decode steps left in the slot's token budget
+      (``max_new_tokens - 1``: the first token comes from admission).
+
+    All slots start frozen; :meth:`~repro.serve.scheduler.Engine` arms a
+    row inside the fused admission step and never needs a host round-trip
+    to retire one.
+    """
+    return {
+        "active": jnp.zeros((max_slots,), jnp.bool_),
+        "eos": jnp.full((max_slots,), -1, jnp.int32),
+        "remaining": jnp.zeros((max_slots,), jnp.int32),
+    }
+
+
+def mask_frozen_pages(slot_caches, active) -> Any:
+    """Point frozen slots' page tables at the sentinel for one decode step.
+
+    The paged-attention update scatters K/V at ``pool[pages[slot, blk]]``;
+    with the table row swapped to the sentinel id those writes become
+    dropped scatters (same mechanism as :func:`clear_slot_pages`), so a
+    frozen slot's KV pool state is bit-frozen while the batch decodes.
+    Reads through the sentinel clamp to an arbitrary pool page — garbage
+    attention output for the frozen row — which :func:`merge_frozen`
+    discards.  Only the table is masked; the real tables are restored by
+    the merge."""
+    def walk(node):
+        if isinstance(node, (list, tuple)):
+            return [walk(n) for n in node]
+        if _is_paged_attn(node):
+            sentinel = jnp.int32(node["k"].shape[0])
+            return dict(node, pages=jnp.where(
+                active[:, None], node["pages"], sentinel))
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(slot_caches)
+
+
+def merge_frozen(new_caches, old_caches, active) -> Any:
+    """Select post-step cache state for active slots, pre-step for frozen.
+
+    Paged layers: the pool K/V keep the stepped values (frozen slots'
+    writes were dropped by :func:`mask_frozen_pages`, so the pool already
+    holds their old bits), the page table is restored from ``old`` (the
+    stepped tree carries the sentinel-masked table), and ``index`` reverts
+    for frozen rows.  Every dense leaf leads with the slot dimension and
+    merges with a broadcast ``where``."""
+    def walk(new, old):
+        if isinstance(new, (list, tuple)):
+            return [walk(n, o) for n, o in zip(new, old)]
+        if _is_paged_attn(new):
+            return dict(
+                new,
+                pages=old["pages"],
+                index=jnp.where(active, new["index"], old["index"]),
+            )
+        if isinstance(new, dict):
+            return {k: walk(new[k], old[k]) for k in new}
+        act = active.reshape((active.shape[0],) + (1,) * (new.ndim - 1))
+        return jnp.where(act, new, old)
+
+    return walk(new_caches, old_caches)
+
+
+# ---------------------------------------------------------------------------
 # host-side allocators
 # ---------------------------------------------------------------------------
 class SlotAllocator:

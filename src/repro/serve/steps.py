@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..core import engine
 from ..models.model import DecoderLM
+from .state_cache import mask_frozen_pages, merge_frozen
 
 
 def abstract_caches(model: DecoderLM, batch: int, max_len: int):
@@ -107,6 +108,54 @@ def make_decode_step(
         return nxt, caches
 
     return decode_step
+
+
+def make_decode_multi(
+    model: DecoderLM, horizon: int, *, backend: str = "auto",
+    mesh=None, seq_shards="auto",
+    blocks: Optional[Mapping[str, Mapping[str, int]]] = None,
+) -> Callable:
+    """Fused multi-step slot decode: ``horizon`` greedy steps, one dispatch.
+
+    ``decode_multi(params, tokens (S,), caches, pos (S,), term)``
+    → ``(block (horizon, S), tokens, caches, pos, term)``
+
+    ``S`` is ``max_slots``; ``term`` is the on-device termination pytree
+    from ``state_cache.init_term_state``.  A ``lax.scan`` rolls the decode
+    recurrence: each step masks frozen slots' page tables to the sentinel
+    (their KV pool writes become dropped scatters), runs the batched
+    ``model.decode_step``, then merges — frozen rows keep their pre-step
+    token/pos/cache bits, so a slot that hits EOS or exhausts its budget
+    mid-horizon is bit-frozen without a host round-trip.  Frozen rows of
+    the returned block repeat the slot's last token; the host trims at the
+    first EOS / budget edge exactly as it does on the k=1 path, which is
+    what keeps outputs bit-identical across horizons.
+
+    ``horizon`` is static (one compiled executable per k); the Engine
+    only ever uses k=1 and k=``eos_scan_every``."""
+
+    def decode_multi(params, tokens, caches, pos, term):
+        def body(carry, _):
+            tokens, caches, pos, active, remaining = carry
+            masked = mask_frozen_pages(caches, active)
+            logits, stepped = model.decode_step(
+                params, tokens[:, None], masked, pos)
+            caches = merge_frozen(stepped, caches, active)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tokens)
+            pos = jnp.where(active, pos + 1, pos)
+            remaining = jnp.where(active, remaining - 1, remaining)
+            active = active & (remaining > 0) & (tok != term["eos"])
+            return (tok, caches, pos, active, remaining), tok
+
+        with _engine_scope(backend, mesh, seq_shards, blocks):
+            carry = (tokens, caches, pos, term["active"], term["remaining"])
+            carry, block = jax.lax.scan(body, carry, None, length=horizon)
+        tokens, caches, pos, active, remaining = carry
+        term = dict(term, active=active, remaining=remaining)
+        return block, tokens, caches, pos, term
+
+    return decode_multi
 
 
 # jitted steps per (model, backend, mesh, seq_shards): repeated `generate`

@@ -1,0 +1,7 @@
+"""GC206 reproducer in the second scoped file (serve/steps.py)."""
+
+import jax
+
+
+def decode_multi(block):
+    return jax.device_get(block)

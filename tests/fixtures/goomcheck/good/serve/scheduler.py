@@ -1,6 +1,10 @@
-"""Known-good scheduler: the clock is read only inside _deadline_clock."""
+"""Known-good scheduler: the clock is read only inside _deadline_clock,
+and every device->host materialization lives in the _TokenFlight
+transfer buffer (host-side data prep passes an explicit dtype)."""
 
 import time
+
+import numpy as np
 
 
 def _deadline_clock():
@@ -10,3 +14,25 @@ def _deadline_clock():
 def sweep(active):
     now = _deadline_clock()
     return [r for r in active if r.deadline > now]
+
+
+class _TokenFlight:
+    def __init__(self):
+        self._blocks = []
+
+    def push(self, block):
+        if hasattr(block, "copy_to_host_async"):
+            block.copy_to_host_async()
+        self._blocks.append(block)
+
+    def take(self):
+        blocks, self._blocks = self._blocks, []
+        return np.concatenate([np.asarray(b) for b in blocks], axis=0)
+
+    def scalar(self, x):
+        return int(np.asarray(x))
+
+
+def admit(prompt):
+    # host-side data prep with an explicit dtype: not a device pull
+    return np.asarray(prompt, np.int32).reshape(-1)

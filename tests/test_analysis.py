@@ -48,6 +48,10 @@ CASES = [
     ("GC202", "gc202.py", "jnp.exp(x)"),
     ("GC203", "gc203.py", "return jax.default_backend()"),
     ("GC204", "serve/scheduler.py", "time.monotonic()"),
+    ("GC206", "serve/scheduler.py", "np.asarray(pending)"),
+    ("GC206", "serve/scheduler.py", "jax.device_get(tokens)"),
+    ("GC206", "serve/scheduler.py", "int(np.asarray(first))"),
+    ("GC206", "serve/steps.py", "jax.device_get(block)"),
 ]
 
 

@@ -152,7 +152,7 @@ def test_status_schema_and_healthz(server):
     snap = api_client.get_status(server.host, server.port)
     assert set(snap) >= {"uptime_s", "requests", "throughput",
                          "latency_ms", "busy_slots", "engine",
-                         "prefix_cache"}
+                         "prefix_cache", "decode"}
     assert set(snap["requests"]) == {"submitted", "finished", "rejected",
                                      "by_finish_reason"}
     assert set(snap["throughput"]) == {"tokens_total", "tokens_per_s",
@@ -181,6 +181,19 @@ def test_status_schema_and_healthz(server):
     assert pc["pages"]["used"] + pc["pages"]["free"] == pc["pages"]["total"]
     assert eng["page_size"] == snap["prefix_cache"]["page_size"]
     assert eng["prefix_reuse"] is True
+    # multi-step decode gauges (satellite: dispatches / host syncs /
+    # tokens-per-dispatch, live from Engine.decode_stats())
+    dec = snap["decode"]
+    assert set(dec) == {"dispatches", "decode_steps", "tokens_per_dispatch",
+                        "host_syncs", "syncs_per_token", "horizon_max",
+                        "last_horizon"}
+    assert dec["dispatches"] >= 1  # warmup + earlier tests decoded
+    assert dec["decode_steps"] >= dec["dispatches"]
+    assert dec["tokens_per_dispatch"] >= 1.0
+    assert dec["horizon_max"] >= 1
+    assert 1 <= dec["last_horizon"] <= dec["horizon_max"]
+    assert dec["host_syncs"] >= 1
+    assert dec["syncs_per_token"] <= 1.0
 
 
 def test_status_prefix_hits_after_shared_prefix_traffic(server):

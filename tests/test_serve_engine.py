@@ -512,3 +512,200 @@ def test_stream_callback_cancel_emits_terminal_event():
     eng.cancel("x")
     assert events[-1] == ("x", "cancelled")
     assert eng.result("x") is CANCELLED
+
+
+# ---------------------------------------------------------------------------
+# multi-step decode: fused horizons must be invisible in the outputs
+# ---------------------------------------------------------------------------
+HORIZONS = [1, 2, 8]
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+def test_multi_step_horizon_parity_bit_identical(chunk):
+    """Fused decode horizons are a dispatch-granularity change only:
+    horizon 1, 2, and 8 engines produce bit-identical token streams for
+    the same workload (3 requests through 2 slots, joins and leaves
+    mid-batch), all equal to per-sequence sequential decode."""
+    cfg, model, params = _model("olmo-1b")
+    prompts = [list(map(int, _prompt(cfg, 4 + 3 * i, seed=60 + i)))
+               for i in range(3)]
+    lens = [12, 5, 9]
+    def reqs():  # fresh Request objects per engine run
+        return [Request(uid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, lens))]
+    results = {}
+    for h in HORIZONS:
+        eng = Engine(model, params, max_slots=2, page_len=64, chunk=chunk,
+                     eos_scan_every=h)
+        results[h] = eng.run(reqs())
+        assert eng.decode_stats()["horizon_max"] == h
+    for h in HORIZONS[1:]:
+        assert results[h] == results[1], f"horizon {h} diverged from 1"
+    for i, (p, n) in enumerate(zip(prompts, lens)):
+        assert results[1][i] == _solo(model, params, p, n), f"request {i}"
+
+
+def test_multi_step_fuses_dispatches():
+    """The horizon-8 engine actually fuses: far fewer dispatches than
+    decode steps, and the realized tokens-per-dispatch approaches the
+    horizon once no admissions are queued."""
+    cfg, model, params = _model("olmo-1b")
+    p = list(map(int, _prompt(cfg, 5, seed=64)))
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4,
+                 eos_scan_every=8)
+    eng.run([Request(uid=0, prompt=p, max_new_tokens=24)])
+    stats = eng.decode_stats()
+    assert stats["decode_steps"] >= 23
+    assert stats["dispatches"] <= 5  # vs 23 single-step dispatches
+    assert stats["tokens_per_dispatch"] > 4.0
+    assert stats["last_horizon"] == 8
+
+
+def test_multi_step_eos_mid_horizon_truncates_exactly():
+    """EOS landing mid-horizon: the device freezes the slot in-flight and
+    the host trims the frozen-repeat tail — output identical to the
+    single-step engine's truncation."""
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 8, seed=20)))
+    base = _solo(model, params, p0, 12)
+    eos = base[4]  # index 4: lands mid-way through the first 8-horizon
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4,
+                 eos_scan_every=8)
+    eng.submit(Request(uid="a", prompt=p0, max_new_tokens=12, eos_id=eos))
+    eng.submit(Request(uid="b",
+                       prompt=list(map(int, _prompt(cfg, 5, seed=21))),
+                       max_new_tokens=4))
+    while eng.has_work:
+        eng.step()
+    assert eng.result("a") == base[:base.index(eos) + 1]
+    assert eng.finish_reason("a") == "stop"
+    assert len(eng.result("b")) == 4  # the frozen slot freed for the queue
+    assert eng._alloc.n_used == 0
+
+
+@pytest.mark.parametrize("budget", [6, 10])
+def test_multi_step_budget_exhaustion_mid_horizon(budget):
+    """Budgets that end mid-horizon (6 and 10 at k=8: inside the first
+    fused dispatch / one step into the second): the device freeze plus
+    the host-side cap trim to exactly ``max_new_tokens`` tokens,
+    bit-identical to sequential decode."""
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=65)))
+    ref = _solo(model, params, p0, budget)
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4,
+                 eos_scan_every=8)
+    eng.submit(Request(uid="a", prompt=p0, max_new_tokens=budget))
+    while eng.has_work:
+        eng.step()
+    assert eng.result("a") == ref and len(eng.result("a")) == budget
+    assert eng.finish_reason("a") == "length"
+
+
+def test_multi_step_deadline_expiry_dispatch_granularity(monkeypatch):
+    """Deadline expiry under k>1: expiry is only checked between
+    dispatches, so a deadline passing mid-horizon evicts at the *next*
+    sweep with up to one horizon of extra tokens — the partial output is
+    still an exact prefix of the reference decode, and the freed slot
+    serves the queue."""
+    from repro.serve import scheduler
+
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 6, seed=40)))
+    p1 = list(map(int, _prompt(cfg, 5, seed=41)))
+    ref0 = _solo(model, params, p0, 40)
+    ref1 = _solo(model, params, p1, 4)
+    clock = _FakeClock()
+    monkeypatch.setattr(scheduler, "time", clock)
+    eng = Engine(model, params, max_slots=1, page_len=64, chunk=4,
+                 eos_scan_every=8)
+    # submitted alone: a non-empty admission queue would (correctly) pin
+    # the horizon at k=1, and this test needs the fused path
+    eng.submit(Request(uid="t", prompt=p0, max_new_tokens=40,
+                       deadline_ms=50.0))
+    eng.step()  # admission + first dispatch (k=1: no step estimate yet)
+    eng.step()
+    eng.step()  # frozen fake clock -> step estimate 0 -> full horizon
+    assert eng.decode_stats()["last_horizon"] == 8
+    clock.now += 0.2  # 200ms: past the 50ms deadline
+    finished = eng.step()
+    assert "t" in finished
+    assert eng.finish_reason("t") == "timeout"
+    got = eng.result("t")
+    assert 0 < len(got) < 40
+    assert got == ref0[:len(got)]
+    # the freed slot serves a follow-up request
+    eng.submit(Request(uid="u", prompt=p1, max_new_tokens=4))
+    while eng.has_work:
+        eng.step()
+    assert eng.result("u") == ref1
+    assert eng._alloc.n_used == 0
+
+
+def test_multi_step_streaming_flush_ordering():
+    """Streaming at horizon 8: events deliver every token exactly once in
+    order (first token at admission, then completed transfer blocks), the
+    concatenation equals the non-streaming reference, and streaming no
+    longer costs one blocking sync per generated token."""
+    cfg, model, params = _model("olmo-1b")
+    p0 = list(map(int, _prompt(cfg, 5, seed=50)))
+    ref = _solo(model, params, p0, 24)
+    got = []
+    eng = Engine(model, params, max_slots=2, page_len=32, chunk=4,
+                 eos_scan_every=8,
+                 stream_callback=lambda uid, toks, reason:
+                     got.append((uid, list(toks), reason)))
+    eng.submit(Request(uid="s", prompt=p0, max_new_tokens=24, stream=True))
+    while eng.has_work:
+        eng.step()
+    # exactly one terminal event, and it is last
+    assert [e[2] for e in got].count(None) == len(got) - 1
+    assert got[-1][2] == "length"
+    streamed = [t for _, toks, _ in got for t in toks]
+    assert streamed == ref == eng.result("s")
+    # incrementality: the first token arrives before the request finishes
+    assert len(got) >= 2
+    # the double-buffered flight batches the host syncs: strictly fewer
+    # materializations than generated tokens (the old engine paid one
+    # blocking sync per token to stream)
+    stats = eng.decode_stats()
+    assert stats["host_syncs"] < stats["decode_steps"]
+    assert stats["host_syncs"] <= stats["dispatches"] + 2
+
+
+def test_multi_step_host_syncs_per_token_regression():
+    """The acceptance bound: at horizon 8 with non-streaming requests the
+    engine materializes at most 1/8 host sync per generated token (the
+    flight buffers whole (k, slots) blocks; no EOS means no scan-window
+    flushes either)."""
+    cfg, model, params = _model("olmo-1b")
+    reqs = [Request(uid=i,
+                    prompt=list(map(int, _prompt(cfg, 4 + i, seed=70 + i))),
+                    max_new_tokens=48)
+            for i in range(2)]
+    eng = Engine(model, params, max_slots=2, page_len=64, chunk=4,
+                 eos_scan_every=8)
+    res = eng.run(reqs)
+    assert all(len(res[i]) == 48 for i in range(2))
+    stats = eng.decode_stats()
+    assert stats["host_syncs"] * 8 <= stats["decode_steps"], stats
+    assert stats["syncs_per_token"] <= 1.0 / 8
+
+
+def test_scheduler_host_syncs_are_goomcheck_guarded():
+    """The host-sync invariant as a goomcheck rule (GC206): every
+    device->host pull in the real scheduler and steps modules sits inside
+    the ``_TokenFlight`` transfer buffer, so sync cost scales with
+    flushes, not tokens.  Companion to the GC204 clock-guard test."""
+    from repro.analysis import repo_root, run_source
+
+    src_dir = repo_root() / "src" / "repro"
+    for rel in ("serve/scheduler.py", "serve/steps.py"):
+        hits = [f for f in run_source((src_dir / rel).read_text(), rel)
+                if f.rule == "GC206"]
+        assert hits == [], [str(h) for h in hits]
+    # and the rule actually bites on a regression:
+    bad = ("import numpy as np\n"
+           "\n"
+           "def flush(pending):\n"
+           "    return np.asarray(pending)\n")
+    assert [f.rule for f in run_source(bad, "serve/steps.py")] == ["GC206"]

@@ -214,7 +214,10 @@ def test_fuzz_eos_stops_and_cancels_reach_terminal_reasons():
     eng = sh.engine
     u = f"fz{_Shared.next_uid}"
     _Shared.next_uid += 1
-    eng.submit(Request(uid=u, prompt=sh.prompts[0], max_new_tokens=8))
+    # budget must outlive one fused decode horizon (one step() now
+    # advances up to eos_scan_every tokens) so the cancel lands mid-flight
+    eng.submit(Request(uid=u, prompt=sh.prompts[0],
+                       max_new_tokens=2 * eng.eos_scan_every))
     eng.step()
     assert eng.cancel(u) is True
     assert eng.pop_result(u) is CANCELLED
